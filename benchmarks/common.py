@@ -1,0 +1,50 @@
+"""Benchmark helpers: wall-clock timing of jitted callables + CSV emit."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+HELPERS = os.path.join(ROOT, "benchmarks", "helpers")
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def run_subprocess(script: str, args: list[str], n_dev: int, timeout=1800) -> dict:
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+        PYTHONPATH=SRC + os.pathsep + HELPERS,
+    )
+    out = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, script), *args],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"{script} failed:\n{out.stdout}\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def emit(rows: list[tuple]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,44 @@
+"""Fig. 3 — Traffic: spatial indexing vs segment length.
+
+Without the grid index the query phase enumerates every vehicle pair
+(quadratic in segment length at constant density); with it, cost grows
+log-linearly.  Derived column = agent·ticks/second.
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import emit, time_fn  # noqa: E402
+from repro.core import Engine  # noqa: E402
+from repro.sims.traffic import init_traffic, make_traffic_sim  # noqa: E402
+
+DENSITY = 0.08  # vehicles per meter of road (over 4 lanes)
+
+
+def run(quick: bool = True):
+    lengths = [1500, 3000, 6000] if quick else [1500, 3000, 6000, 12000, 24000]
+    ticks = 5
+    rows = []
+    for length in lengths:
+        n = int(length * DENSITY)
+        sim = make_traffic_sim(length=float(length))
+        state = init_traffic(sim, n=n, capacity=int(n * 1.2), seed=0)
+        for index in ("grid", "brute"):
+            if index == "brute" and n > 1000 and quick:
+                pass  # keep the quadratic baseline bounded in quick mode
+            eng = Engine(sim, n_agents_hint=n, index=index)
+            us = time_fn(
+                lambda st: eng.run(st, n_ticks=ticks, seed=0)[0], state,
+                warmup=1, iters=3,
+            )
+            tput = n * ticks / (us / 1e6)
+            rows.append((f"fig3_traffic_len{length}_{index}", us / ticks,
+                         f"{tput:.0f} agent-ticks/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(quick="--full" not in sys.argv))

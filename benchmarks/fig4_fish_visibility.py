@@ -1,0 +1,39 @@
+"""Fig. 4 — Fish: indexing benefit vs visibility range.
+
+As ρ grows, each KD-tree/grid probe returns more results, so the indexed
+path degrades toward the quadratic baseline — but stays ahead (paper: "two
+to three times improvement over a range of visibility values").
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import emit, time_fn  # noqa: E402
+from repro.core import Engine  # noqa: E402
+from repro.sims.fish import init_school, make_fish_sim  # noqa: E402
+
+
+def run(quick: bool = True):
+    n = 600 if quick else 2000
+    ticks = 5
+    rows = []
+    for rho in ([0.5, 1.0, 2.0] if quick else [0.5, 1.0, 2.0, 3.0, 4.0]):
+        sim = make_fish_sim(world=(40.0, 10.0), rho=rho)
+        state = init_school(sim, n=n, capacity=int(n * 1.2), seed=0, spread=8.0)
+        for index in ("grid", "brute"):
+            eng = Engine(sim, n_agents_hint=n, index=index, cell_capacity=256)
+            us = time_fn(
+                lambda st: eng.run(st, n_ticks=ticks, seed=0)[0], state,
+                warmup=1, iters=3,
+            )
+            tput = n * ticks / (us / 1e6)
+            rows.append((f"fig4_fish_rho{rho}_{index}", us / ticks,
+                         f"{tput:.0f} agent-ticks/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(quick="--full" not in sys.argv))

@@ -1,0 +1,34 @@
+"""Fig. 5 — Predator: effect inversion eliminates the second reduce pass.
+
+Runs the scatter-form (two-pass map-reduce-reduce) and the compiler-
+inverted gather-form (single pass) of the identical predator script on a
+multi-device mesh, reporting agent-tick throughput (paper: >20% gain).
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import emit, run_subprocess  # noqa: E402
+
+
+def run(quick: bool = True, n_dev: int = 8):
+    res = run_subprocess("dist_bench.py", ["inversion", "16" if quick else "64"], n_dev)
+    rows = []
+    for label in ("two_pass", "inverted"):
+        r = res[label]
+        rows.append((
+            f"fig5_predator_{label}_{n_dev}dev",
+            r["s"] * 1e6,
+            f"{r['agent_ticks_per_s']:.0f} agent-ticks/s",
+        ))
+    rows.append((
+        f"fig5_inversion_speedup_{n_dev}dev", 0.0, f"{res['speedup']:.3f}x"
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(quick="--full" not in sys.argv))

@@ -1,0 +1,30 @@
+"""Fig. 6 — Traffic scale-up: agents and road length scale with devices;
+throughput should grow ~linearly (uniform density ⇒ balanced without LB)."""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import emit, run_subprocess  # noqa: E402
+
+
+def run(quick: bool = True):
+    devs = [1, 2, 4] if quick else [1, 2, 4, 8]
+    n_per = 200 if quick else 500
+    rows = []
+    base = None
+    for nd in devs:
+        res = run_subprocess("dist_bench.py", ["scaleup", "traffic", str(n_per)], nd)
+        tput = res["agent_ticks_per_s"]
+        base = base or tput
+        rows.append((
+            f"fig6_traffic_scaleup_{nd}dev", res["s"] * 1e6,
+            f"{tput:.0f} agent-ticks/s (x{tput / base:.2f})",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(quick="--full" not in sys.argv))

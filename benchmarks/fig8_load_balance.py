@@ -1,0 +1,32 @@
+"""Fig. 8 — Load balancing: per-epoch time/imbalance for the drifting fish
+school with the balancer on vs off."""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import emit, run_subprocess  # noqa: E402
+
+
+def run(quick: bool = True, n_dev: int = 4):
+    res = run_subprocess(
+        "dist_bench.py", ["loadbalance", "4" if quick else "8"], n_dev,
+    )
+    rows = []
+    for label in ("lb", "no_lb"):
+        r = res[label]
+        mean_s = float(np.mean(r["epoch_s"][1:]))  # skip compile epoch
+        final_imb = r["imbalance"][-1]
+        rows.append((
+            f"fig8_{label}_{n_dev}dev", mean_s * 1e6,
+            f"epoch={mean_s:.3f}s final_imbalance={final_imb:.2f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(quick="--full" not in sys.argv))

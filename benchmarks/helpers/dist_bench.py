@@ -1,0 +1,123 @@
+"""Subprocess benchmark body: distributed throughput measurements.
+
+Usage: dist_bench.py <scenario> [args...]; prints JSON on the last line.
+Scenarios:
+  inversion <ticks>        — predator scatter (2-pass) vs inverted (1-pass)
+  scaleup <sim> <n_per>    — agent-ticks/s at the current device count
+  loadbalance <epochs>     — drifting fish ± load balancing epoch times
+"""
+
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def main():
+    scenario = sys.argv[1]
+    import jax
+
+    n_dev = jax.device_count()
+
+    if scenario == "inversion":
+        ticks = int(sys.argv[2]) if len(sys.argv) > 2 else 20
+        from repro.core.distribute import DistEngine
+        from repro.sims.predator import init_population, make_predator_sim
+
+        n = 240 * n_dev
+        out = {}
+        for label, inverted in (("two_pass", False), ("inverted", True)):
+            sim = make_predator_sim(world=(10.0 * n_dev, 10.0), inverted=inverted)
+            state = init_population(
+                sim, n_prey=int(n * 0.9), n_pred=n - int(n * 0.9),
+                capacity=int(n * 1.4), seed=0,
+            )
+            eng = DistEngine(sim, n_agents_hint=n, capacity_factor=4.0)
+            assert eng.cfg.two_pass is (not inverted)
+            bounds = eng.uniform_bounds()
+            st = eng.distribute(state, bounds)
+            st, _ = eng.run_epoch(st, bounds, n_ticks=2, seed=0)  # warmup
+            t0 = time.perf_counter()
+            st, _ = eng.run_epoch(st, bounds, n_ticks=ticks, seed=0, t0=2)
+            dt = time.perf_counter() - t0
+            out[label] = {"s": dt, "agent_ticks_per_s": n * ticks / dt}
+        out["speedup"] = out["two_pass"]["s"] / out["inverted"]["s"]
+        print(json.dumps(out))
+
+    elif scenario == "scaleup":
+        sim_name = sys.argv[2]
+        n_per = int(sys.argv[3])
+        ticks = int(sys.argv[4]) if len(sys.argv) > 4 else 20
+        n = n_per * n_dev
+        if sim_name == "traffic":
+            from repro.sims.traffic import init_traffic, make_traffic_sim
+
+            length = 2000.0 * n_dev  # scale the road with the cluster
+            sim = make_traffic_sim(length=length)
+            state = init_traffic(sim, n=n, capacity=int(n * 1.3), seed=0)
+        else:
+            from repro.sims.fish import init_school, make_fish_sim
+
+            sim = make_fish_sim(world=(15.0 * n_dev, 10.0))
+            state = init_school(
+                sim, n=n, capacity=int(n * 1.3), seed=0, spread=3.0 * n_dev
+            )
+        if n_dev == 1:
+            from repro.core import Engine
+
+            eng = Engine(sim, n_agents_hint=n, cell_capacity=192)
+            eng.run(state, n_ticks=2, seed=0)
+            t0 = time.perf_counter()
+            eng.run(state, n_ticks=ticks, seed=0)
+            dt = time.perf_counter() - t0
+        else:
+            from repro.core.distribute import DistEngine
+
+            eng = DistEngine(sim, n_agents_hint=n, capacity_factor=4.0,
+                             cell_capacity=192)
+            bounds = eng.uniform_bounds()
+            st = eng.distribute(state, bounds)
+            st, _ = eng.run_epoch(st, bounds, n_ticks=2, seed=0)
+            t0 = time.perf_counter()
+            eng.run_epoch(st, bounds, n_ticks=ticks, seed=0, t0=2)
+            dt = time.perf_counter() - t0
+        print(json.dumps({
+            "n_dev": n_dev, "agents": n,
+            "agent_ticks_per_s": n * ticks / dt, "s": dt,
+        }))
+
+    elif scenario == "loadbalance":
+        epochs = int(sys.argv[2]) if len(sys.argv) > 2 else 5
+        from repro.core.distribute import DistEngine
+        from repro.core.master import Master, MasterConfig
+        from repro.sims.fish import init_school, make_fish_sim
+
+        n = 300 * n_dev
+        sim = make_fish_sim(world=(15.0 * n_dev, 10.0), omega=1.2, noise=0.03)
+        state0 = init_school(sim, n=n, capacity=2 * n, seed=0,
+                             informed_fraction=0.25)
+        out = {}
+        for lb in (True, False):
+            eng = DistEngine(sim, n_agents_hint=n, capacity_factor=6.0,
+                             cell_capacity=256)
+            m = Master(eng, MasterConfig(
+                ticks_per_epoch=20, checkpoint_every=0, load_balance=lb,
+                lb_imbalance_threshold=1.15, seed=0))
+            st = m.start(state0)
+            times, imbs = [], []
+            for _ in range(epochs):
+                t0 = time.perf_counter()
+                st, rep = m.run_epoch(st)
+                times.append(time.perf_counter() - t0)
+                imbs.append(rep.imbalance)
+            out["lb" if lb else "no_lb"] = {
+                "epoch_s": times, "imbalance": imbs,
+            }
+        print(json.dumps(out))
+    else:
+        raise SystemExit(f"unknown scenario {scenario}")
+
+
+if __name__ == "__main__":
+    main()

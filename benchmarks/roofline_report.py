@@ -1,0 +1,43 @@
+"""Roofline table from the dry-run result cache (results/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import ROOT, emit  # noqa: E402
+
+
+def run(quick: bool = True, result_dir: str | None = None):
+    result_dir = result_dir or os.path.join(ROOT, "results", "dryrun")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*__single.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0, "SKIP"))
+            continue
+        if not r.get("ok"):
+            rows.append((f"roofline_{r['arch']}_{r['shape']}", 0.0, "FAIL"))
+            continue
+        roof = r["roofline"]
+        t_star = max(roof["t_compute_s"], roof["t_memory_s"], roof["t_collective_s"])
+        frac = roof["t_compute_s"] / t_star if t_star else 0.0
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}",
+            t_star * 1e6,
+            f"dom={roof['dominant']} frac_of_roofline={frac:.3f} "
+            f"useful={r['useful_ratio']:.2f}",
+        ))
+    if not rows:
+        rows.append(("roofline_no_results", 0.0,
+                     "run: python -m repro.launch.dryrun --all"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

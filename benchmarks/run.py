@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` widens sweeps;
+``--only=fig3,fig5`` selects modules.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (  # noqa: E402
+    fig3_traffic_indexing,
+    fig4_fish_visibility,
+    fig5_effect_inversion,
+    fig6_traffic_scaleup,
+    fig7_fish_scaleup,
+    fig8_load_balance,
+    roofline_report,
+    table2_validation,
+)
+from benchmarks.common import emit  # noqa: E402
+
+MODULES = {
+    "fig3": fig3_traffic_indexing,
+    "fig4": fig4_fish_visibility,
+    "fig5": fig5_effect_inversion,
+    "fig6": fig6_traffic_scaleup,
+    "fig7": fig7_fish_scaleup,
+    "fig8": fig8_load_balance,
+    "table2": table2_validation,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    only = None
+    for a in sys.argv[1:]:
+        if a.startswith("--only="):
+            only = a.split("=", 1)[1].split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, mod in MODULES.items():
+        if only and key not in only:
+            continue
+        try:
+            emit(mod.run(quick=quick))
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{key}_ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

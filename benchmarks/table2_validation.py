@@ -1,0 +1,78 @@
+"""Table 2 — MITSIM-model validation: RMSPE of aggregate lane statistics
+between the BRASIL traffic program and the independent hand-coded
+simulator (sims/traffic_oracle.py plays MITSIM's role — same driver
+models, different codebase and RNG)."""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+
+from benchmarks.common import emit, time_fn  # noqa: E402
+from repro.core import Engine  # noqa: E402
+from repro.sims.traffic import init_traffic, make_traffic_sim  # noqa: E402
+from repro.sims.traffic_oracle import (  # noqa: E402
+    OracleParams,
+    TrafficOracle,
+    lane_statistics,
+    rmspe,
+)
+
+N_LANES = 4
+
+
+def run(quick: bool = True):
+    n, ticks, warmup = (240, 80, 30) if quick else (600, 300, 100)
+    length = 2000.0 if quick else 5000.0
+
+    # BRASIL side
+    sim = make_traffic_sim(length=length)
+    eng = Engine(sim, n_agents_hint=n)
+    state = init_traffic(sim, n=n, capacity=int(n * 1.2), seed=0)
+    stats_b = []
+    lane_prev = None
+    for t in range(ticks):
+        state, _ = eng.run(state, n_ticks=1, seed=0, t0=t)
+        alive = np.asarray(state.alive)
+        lane = np.asarray(state.fields["lane"])[alive]
+        v = np.asarray(state.fields["v"])[alive]
+        x = np.asarray(state.fields["x"])[alive]
+        changes = (
+            np.zeros(len(lane), bool) if lane_prev is None or len(lane_prev) != len(lane)
+            else lane_prev != lane
+        )
+        if t >= warmup:
+            stats_b.append(lane_statistics(x, lane, v, changes, N_LANES, length))
+        lane_prev = lane
+    stats_b = np.mean(stats_b, axis=0)  # [lane, (dens, vel, chg)]
+
+    # oracle side
+    p = OracleParams(length=length)
+    orc = TrafficOracle(p, seed=4242)
+    rs = np.random.RandomState(0)
+    x = rs.uniform(0, length, n)
+    lane = rs.randint(0, N_LANES, n).astype(float)
+    v = rs.uniform(10, 24, n)
+    stats_o = []
+    for t in range(ticks):
+        x, lane, v, chg = orc.step(x, lane, v)
+        if t >= warmup:
+            stats_o.append(lane_statistics(x, lane, v, chg, N_LANES, length))
+    stats_o = np.mean(stats_o, axis=0)
+
+    rows = []
+    metric_names = ["avg_density", "avg_velocity", "change_freq"]
+    for mi, mname in enumerate([0, 1, 2]):
+        for ln in range(N_LANES):
+            e = rmspe([stats_o[ln, mi] + 1e-6], [stats_b[ln, mi] + 1e-6])
+            rows.append((
+                f"table2_L{ln + 1}_{metric_names[mi]}", 0.0, f"RMSPE={e:.3f}"
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(quick="--full" not in sys.argv))

@@ -1,0 +1,34 @@
+"""BRASIL — the Big Red Agent SImulation Language, as an embedded JAX DSL."""
+
+from .ast import (  # noqa: F401
+    Eff,
+    Other,
+    Param,
+    Self,
+    abs_,
+    atan2,
+    clip,
+    cos,
+    exp,
+    floor,
+    log,
+    maximum,
+    minimum,
+    rand_normal,
+    rand_uniform,
+    sign,
+    sin,
+    sqrt,
+    to_float,
+    to_int,
+    where,
+)
+from .compiler import BrasilError, compile_agent, effect_specs, field_specs  # noqa: F401
+from .fields import AgentClass  # noqa: F401
+from .optimize import (  # noqa: F401
+    eliminate_dead_effects,
+    fold_program_constants,
+    invert_effects,
+    optimize,
+    widen_visibility,
+)

@@ -1,0 +1,358 @@
+"""BRASIL expression AST.
+
+BRASIL (paper §4) is an agent-centric language whose restrictions — state /
+effect field tagging, foreach-only iteration, combinator-aggregated effect
+assignment — make every program compilable to a data-flow plan.  The paper
+compiles to the monad algebra; here the embedded-DSL equivalent is a small
+expression AST that the compiler lowers onto vectorized JAX, which plays the
+same role (§4.2's algebraic rewrites operate on this AST).
+
+Expressions are built by operator overloading::
+
+    gap = Other("x") - Self("x")
+    F.emit("self", "lead", key=gap, where=(gap > 0) & (Other("lane") == Self("lane")))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+SELF = "self"
+OTHER = "other"
+
+_rand_counter = itertools.count()
+
+
+class Expr:
+    """Base expression node (operator overloading builds the tree)."""
+
+    # arithmetic ------------------------------------------------------------
+    def __add__(self, o): return BinOp("add", self, wrap(o))
+    def __radd__(self, o): return BinOp("add", wrap(o), self)
+    def __sub__(self, o): return BinOp("sub", self, wrap(o))
+    def __rsub__(self, o): return BinOp("sub", wrap(o), self)
+    def __mul__(self, o): return BinOp("mul", self, wrap(o))
+    def __rmul__(self, o): return BinOp("mul", wrap(o), self)
+    def __truediv__(self, o): return BinOp("div", self, wrap(o))
+    def __rtruediv__(self, o): return BinOp("div", wrap(o), self)
+    def __mod__(self, o): return BinOp("mod", self, wrap(o))
+    def __pow__(self, o): return BinOp("pow", self, wrap(o))
+    def __neg__(self): return BinOp("mul", Const(-1.0), self)
+
+    # comparisons -----------------------------------------------------------
+    def __lt__(self, o): return Cmp("lt", self, wrap(o))
+    def __le__(self, o): return Cmp("le", self, wrap(o))
+    def __gt__(self, o): return Cmp("gt", self, wrap(o))
+    def __ge__(self, o): return Cmp("ge", self, wrap(o))
+    def eq(self, o): return Cmp("eq", self, wrap(o))
+    def ne(self, o): return Cmp("ne", self, wrap(o))
+
+    # boolean ---------------------------------------------------------------
+    def __and__(self, o): return BinOp("and", self, wrap(o))
+    def __or__(self, o): return BinOp("or", self, wrap(o))
+    def __invert__(self): return Call("not", (self,))
+
+    def __hash__(self):  # identity hash; trees are not deduplicated
+        return id(self)
+
+
+def wrap(v: Any) -> Expr:
+    if isinstance(v, Expr):
+        return v
+    if isinstance(v, (int, float, bool)):
+        return Const(v)
+    raise TypeError(f"cannot use {type(v).__name__} in a BRASIL expression")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Const(Expr):
+    value: Any
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Ref(Expr):
+    """Reference to a field of the active agent (SELF) or the foreach
+    iteration variable (OTHER)."""
+
+    role: str  # SELF | OTHER
+    kind: str  # "state" | "effect" | "param"
+    name: str
+    component: str | None = None  # payload component for min_by/max_by
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Rand(Expr):
+    """Per-agent random draw (update phase only, like the paper's rand())."""
+
+    kind: str = "uniform"  # uniform [0,1) | normal
+    tag: int = dataclasses.field(default_factory=lambda: next(_rand_counter))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BinOp(Expr):
+    op: str
+    a: Expr
+    b: Expr
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Cmp(Expr):
+    op: str
+    a: Expr
+    b: Expr
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Where(Expr):
+    cond: Expr
+    a: Expr
+    b: Expr
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Call(Expr):
+    fn: str
+    args: tuple
+
+
+# ---------------------------------------------------------------------------
+# public constructors
+# ---------------------------------------------------------------------------
+
+def Self(name: str) -> Ref:
+    return Ref(SELF, "state", name)
+
+
+def Other(name: str) -> Ref:
+    return Ref(OTHER, "state", name)
+
+
+def Eff(name: str, component: str | None = None) -> Ref:
+    return Ref(SELF, "effect", name, component)
+
+
+def Param(name: str) -> Ref:
+    return Ref(SELF, "param", name)
+
+
+def rand_uniform() -> Rand:
+    return Rand("uniform")
+
+
+def rand_normal() -> Rand:
+    return Rand("normal")
+
+
+def where(cond, a, b) -> Where:
+    return Where(wrap(cond), wrap(a), wrap(b))
+
+
+def _call1(fn):
+    return lambda a: Call(fn, (wrap(a),))
+
+
+abs_ = _call1("abs")
+exp = _call1("exp")
+log = _call1("log")
+sqrt = _call1("sqrt")
+floor = _call1("floor")
+sign = _call1("sign")
+sin = _call1("sin")
+cos = _call1("cos")
+to_float = _call1("float")
+to_int = _call1("int")
+
+
+def minimum(a, b) -> Expr:
+    return Call("minimum", (wrap(a), wrap(b)))
+
+
+def maximum(a, b) -> Expr:
+    return Call("maximum", (wrap(a), wrap(b)))
+
+
+def clip(a, lo, hi) -> Expr:
+    return Call("clip", (wrap(a), wrap(lo), wrap(hi)))
+
+
+def atan2(a, b) -> Expr:
+    return Call("atan2", (wrap(a), wrap(b)))
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+_BINOPS = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
+    "mod": lambda a, b: a % b,
+    "pow": lambda a, b: a**b,
+    "and": jnp.logical_and,
+    "or": jnp.logical_or,
+}
+
+_CMPS = {
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+}
+
+_CALLS = {
+    "abs": jnp.abs,
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "sqrt": jnp.sqrt,
+    "floor": jnp.floor,
+    "sign": jnp.sign,
+    "sin": jnp.sin,
+    "cos": jnp.cos,
+    "not": jnp.logical_not,
+    "minimum": jnp.minimum,
+    "maximum": jnp.maximum,
+    "clip": jnp.clip,
+    "atan2": jnp.arctan2,
+    "float": lambda a: a.astype(jnp.float32),
+    "int": lambda a: a.astype(jnp.int32),
+}
+
+
+class EvalEnv:
+    """Binding of AST references to arrays for one evaluation context."""
+
+    def __init__(
+        self,
+        self_state: dict[str, Array],
+        other_state: dict[str, Array] | None,
+        effects: dict[str, Any] | None,
+        params: dict[str, Any],
+        rng: Array | None = None,
+        oid: Array | None = None,
+    ):
+        self.self_state = self_state
+        self.other_state = other_state
+        self.effects = effects
+        self.params = params
+        self.rng = rng
+        self.oid = oid
+
+    def ref(self, node: Ref) -> Array:
+        if node.kind == "param":
+            return jnp.asarray(self.params[node.name])
+        if node.kind == "state":
+            src = self.self_state if node.role == SELF else self.other_state
+            if src is None:
+                raise KeyError(f"{node.role}.{node.name} not available here")
+            return src[node.name]
+        if node.kind == "effect":
+            if self.effects is None:
+                raise KeyError(f"effect {node.name} not available here")
+            v = self.effects[node.name]
+            if isinstance(v, dict):
+                return v[node.component or "key"]
+            return v
+        raise KeyError(node.kind)
+
+    def rand(self, node: Rand) -> Array:
+        if self.rng is None:
+            raise RuntimeError("rand() not available in this phase")
+        key = jax.random.fold_in(self.rng, node.tag)
+        if self.oid is not None:
+            # Per-agent streams keyed by oid: randomness is identical no
+            # matter how agents are partitioned across devices — single-node
+            # and distributed trajectories agree bitwise.
+            keys = jax.vmap(lambda o: jax.random.fold_in(key, o))(self.oid)
+            draw = jax.random.uniform if node.kind == "uniform" else jax.random.normal
+            return jax.vmap(lambda k: draw(k, ()))(keys)
+        shape = next(iter(self.self_state.values())).shape[:1]
+        if node.kind == "uniform":
+            return jax.random.uniform(key, shape)
+        return jax.random.normal(key, shape)
+
+
+def evaluate(expr: Expr, env: EvalEnv) -> Array:
+    if isinstance(expr, Const):
+        return jnp.asarray(expr.value)
+    if isinstance(expr, Ref):
+        return env.ref(expr)
+    if isinstance(expr, Rand):
+        return env.rand(expr)
+    if isinstance(expr, BinOp):
+        return _BINOPS[expr.op](evaluate(expr.a, env), evaluate(expr.b, env))
+    if isinstance(expr, Cmp):
+        return _CMPS[expr.op](evaluate(expr.a, env), evaluate(expr.b, env))
+    if isinstance(expr, Where):
+        return jnp.where(
+            evaluate(expr.cond, env), evaluate(expr.a, env), evaluate(expr.b, env)
+        )
+    if isinstance(expr, Call):
+        return _CALLS[expr.fn](*[evaluate(a, env) for a in expr.args])
+    raise TypeError(f"not a BRASIL expression: {expr!r}")
+
+
+def walk(expr: Expr):
+    """Yield every node in the tree."""
+    yield expr
+    if isinstance(expr, (BinOp, Cmp)):
+        yield from walk(expr.a)
+        yield from walk(expr.b)
+    elif isinstance(expr, Where):
+        yield from walk(expr.cond)
+        yield from walk(expr.a)
+        yield from walk(expr.b)
+    elif isinstance(expr, Call):
+        for a in expr.args:
+            yield from walk(a)
+
+
+def swap_roles(expr: Expr) -> Expr:
+    """SELF↔OTHER — the core of effect inversion (paper Thm 2/3)."""
+    if isinstance(expr, Ref):
+        if expr.kind == "state":
+            role = OTHER if expr.role == SELF else SELF
+            return Ref(role, expr.kind, expr.name, expr.component)
+        return expr
+    if isinstance(expr, BinOp):
+        return BinOp(expr.op, swap_roles(expr.a), swap_roles(expr.b))
+    if isinstance(expr, Cmp):
+        return Cmp(expr.op, swap_roles(expr.a), swap_roles(expr.b))
+    if isinstance(expr, Where):
+        return Where(swap_roles(expr.cond), swap_roles(expr.a), swap_roles(expr.b))
+    if isinstance(expr, Call):
+        return Call(expr.fn, tuple(swap_roles(a) for a in expr.args))
+    return expr
+
+
+def fold_constants(expr: Expr) -> Expr:
+    """Bottom-up constant folding (one of §4.2's algebraic rewrites)."""
+    if isinstance(expr, BinOp):
+        a, b = fold_constants(expr.a), fold_constants(expr.b)
+        if isinstance(a, Const) and isinstance(b, Const):
+            import numpy as np
+
+            val = _BINOPS[expr.op](np.asarray(a.value), np.asarray(b.value))
+            return Const(val.item() if hasattr(val, "item") else val)
+        return BinOp(expr.op, a, b)
+    if isinstance(expr, Cmp):
+        return Cmp(expr.op, fold_constants(expr.a), fold_constants(expr.b))
+    if isinstance(expr, Where):
+        c = fold_constants(expr.cond)
+        a, b = fold_constants(expr.a), fold_constants(expr.b)
+        if isinstance(c, Const):
+            return a if c.value else b
+        return Where(c, a, b)
+    if isinstance(expr, Call):
+        return Call(expr.fn, tuple(fold_constants(a) for a in expr.args))
+    return expr

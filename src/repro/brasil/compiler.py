@@ -1,0 +1,194 @@
+"""BRASIL → TickPlan compiler.
+
+Enforces the state-effect pattern's read/write legality (paper §2.1/§4.1):
+
+  * query phase (emit value/where expressions): states are READ-ONLY and may
+    be read on both SELF and OTHER; effects may not be read; no rand().
+  * update phase (update rules / kill): reads SELF states and SELF effects
+    only; writes SELF states; rand() allowed.
+  * position states with a ``reach`` bound get their updates cropped to
+    ±reach per tick (the paper's #range crop), which is what makes the
+    distributed runtime's bounded-migration buffers sound.
+
+The output ``TickPlan`` is consumed by core/tick.py (single partition) and
+core/distribute.py (shard_map runtime).  Optimizations — effect inversion,
+dead-effect elimination, constant folding — live in optimize.py and operate
+on the AgentClass/AST level before compilation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.agents import EffectSpec, FieldSpec
+from ..core.join import Visibility
+from ..core.tick import TickPlan
+from . import ast as A
+from .fields import AgentClass
+
+
+class BrasilError(Exception):
+    pass
+
+
+def _check_query_expr(cls: AgentClass, expr: A.Expr, ctx: str):
+    for node in A.walk(expr):
+        if isinstance(node, A.Rand):
+            raise BrasilError(f"{ctx}: rand() is only legal in update rules")
+        if isinstance(node, A.Ref):
+            if node.kind == "effect":
+                raise BrasilError(
+                    f"{ctx}: effect fields are write-only during the query phase"
+                )
+            if node.kind == "state" and node.name not in cls.states:
+                raise BrasilError(f"{ctx}: unknown state field {node.name!r}")
+
+
+def _check_update_expr(cls: AgentClass, expr: A.Expr, ctx: str):
+    for node in A.walk(expr):
+        if isinstance(node, A.Ref):
+            if node.role == A.OTHER:
+                raise BrasilError(
+                    f"{ctx}: update rules may only read the agent's own fields"
+                )
+            if node.kind == "state" and node.name not in cls.states:
+                raise BrasilError(f"{ctx}: unknown state field {node.name!r}")
+            if node.kind == "effect":
+                if node.name not in cls.effects:
+                    raise BrasilError(f"{ctx}: unknown effect field {node.name!r}")
+                decl = cls.effects[node.name]
+                if node.component and node.component != "key":
+                    if node.component not in [p[0] for p in decl.payload]:
+                        raise BrasilError(
+                            f"{ctx}: effect {node.name!r} has no payload "
+                            f"{node.component!r}"
+                        )
+
+
+def _renumber_rands(cls: AgentClass) -> None:
+    """Assign deterministic Rand tags in declaration order so structurally
+    identical programs (e.g. a script and its effect-inverted twin) draw
+    identical random streams."""
+    seen: set[int] = set()
+    counter = 0
+    exprs = list(cls.updates.values())
+    if cls.alive_rule is not None:
+        exprs.append(cls.alive_rule)
+    for expr in exprs:
+        for node in A.walk(expr):
+            if isinstance(node, A.Rand) and id(node) not in seen:
+                seen.add(id(node))
+                object.__setattr__(node, "tag", counter)
+                counter += 1
+
+
+def validate(cls: AgentClass) -> None:
+    _renumber_rands(cls)
+    for e in cls.emits:
+        ctx = f"emit → {e.effect}"
+        vals = e.value.values() if isinstance(e.value, dict) else [e.value]
+        for v in vals:
+            _check_query_expr(cls, v, ctx)
+        if e.where is not None:
+            _check_query_expr(cls, e.where, ctx)
+    for name, expr in cls.updates.items():
+        _check_update_expr(cls, expr, f"update {name}")
+    if cls.alive_rule is not None:
+        _check_update_expr(cls, cls.alive_rule, "kill")
+    for p in cls.position:
+        if p not in cls.states:
+            raise BrasilError(f"position field {p!r} is not a declared state")
+
+
+def field_specs(cls: AgentClass) -> list[FieldSpec]:
+    return [
+        FieldSpec(s.name, shape=tuple(s.shape), dtype=s.dtype)
+        for s in cls.states.values()
+    ]
+
+
+def effect_specs(cls: AgentClass) -> list[EffectSpec]:
+    return [
+        EffectSpec(
+            e.name, comb=e.comb, shape=tuple(e.shape), dtype=e.dtype, payload=e.payload
+        )
+        for e in cls.effects.values()
+    ]
+
+
+def reach_bounds(cls: AgentClass) -> tuple[float, float]:
+    rx = cls.states[cls.position[0]].reach
+    ry = cls.states[cls.position[1]].reach
+    return (
+        float(rx) if rx is not None else float("inf"),
+        float(ry) if ry is not None else float("inf"),
+    )
+
+
+def compile_agent(cls: AgentClass) -> TickPlan:
+    """Lower an AgentClass to an executable TickPlan."""
+    validate(cls)
+    emits = list(cls.emits)
+    updates = dict(cls.updates)
+    alive_rule = cls.alive_rule
+    has_nonlocal = any(e.target == "other" for e in emits)
+
+    def pair_fn(self_env, other_env, params):
+        env = A.EvalEnv(self_env, other_env, effects=None, params=params)
+        out = []
+        for e in emits:
+            if isinstance(e.value, dict):
+                val = {k: A.evaluate(v, env) for k, v in e.value.items()}
+                # broadcast every component to the pair shape [N, K]
+                shape = jnp.broadcast_shapes(*[v.shape for v in val.values()])
+                val = {k: jnp.broadcast_to(v, shape) for k, v in val.items()}
+            else:
+                val = A.evaluate(e.value, env)
+            cond = None if e.where is None else A.evaluate(e.where, env)
+            out.append((e.target, e.effect, val, cond))
+        return out
+
+    position = cls.position
+    reaches = {
+        s.name: s.reach for s in cls.states.values() if s.reach is not None
+    }
+    wraps = {s.name: s.wrap for s in cls.states.values() if s.wrap is not None}
+
+    def update_fn(fields, effects, params, rng, t, oid=None):
+        env = A.EvalEnv(fields, None, effects=effects, params=params, rng=rng, oid=oid)
+        new_fields = dict(fields)
+        for name, expr in updates.items():
+            val = A.evaluate(expr, env)
+            val = jnp.broadcast_to(val, fields[name].shape).astype(fields[name].dtype)
+            if name in reaches:  # #range crop
+                r = reaches[name]
+                delta = val - fields[name]
+                if name in wraps:  # shortest displacement on the circle
+                    period = wraps[name]
+                    delta = delta - period * jnp.round(delta / period)
+                val = fields[name] + jnp.clip(delta, -r, r)
+            if name in wraps:
+                val = jnp.mod(val, wraps[name])
+            new_fields[name] = val
+        n = next(iter(fields.values())).shape[0]
+        alive = jnp.ones((n,), bool)
+        if alive_rule is not None:
+            alive = ~jnp.broadcast_to(A.evaluate(alive_rule, env), (n,))
+        return new_fields, alive
+
+    periods = tuple(
+        cls.states[p].wrap if cls.states[p].wrap is not None else None
+        for p in cls.position
+    )
+    vis = Visibility(
+        pos_fields=position, bounds=cls.visibility, radius=cls.radius, periods=periods
+    )
+    return TickPlan(
+        effect_specs=effect_specs(cls),
+        pair_fn=pair_fn,
+        update_fn=update_fn,
+        visibility=vis,
+        reach=reach_bounds(cls),
+        has_nonlocal=has_nonlocal,
+    )

@@ -1,0 +1,127 @@
+"""AgentClass — the BRASIL class declaration (paper §4.1, Fig. 2).
+
+The embedded-DSL equivalent of a BRASIL class file: state fields with
+update rules and ``#range`` constraints, effect fields with combinators,
+parameters, and the query phase's foreach body expressed as effect
+emissions.  The compiler (compiler.py) enforces the state-effect pattern's
+read/write restrictions when lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from .ast import Expr, wrap
+
+
+@dataclasses.dataclass
+class StateDecl:
+    name: str
+    dtype: Any = jnp.float32
+    shape: tuple = ()
+    reach: float | None = None  # per-tick movement bound (#range), position axes
+    wrap: float | None = None   # periodic domain: value ← value mod wrap
+
+
+@dataclasses.dataclass
+class EffectDecl:
+    name: str
+    comb: str = "sum"
+    dtype: Any = jnp.float32
+    shape: tuple = ()
+    payload: tuple = ()  # (name, shape, dtype) triples for min_by/max_by
+
+
+@dataclasses.dataclass
+class Emit:
+    """One effect assignment inside the foreach-loop (``<-`` in BRASIL)."""
+
+    target: str  # "self" (local) | "other" (non-local)
+    effect: str
+    value: Any  # Expr, or dict[str, Expr] for min_by/max_by ({"key", payloads})
+    where: Expr | None = None
+
+
+class AgentClass:
+    """Declarative agent class; see sims/ for complete examples."""
+
+    def __init__(
+        self,
+        name: str,
+        position: tuple[str, str],
+        visibility: tuple[float, float],
+        radius: float | None = None,
+    ):
+        self.name = name
+        self.position = tuple(position)
+        self.visibility = tuple(float(v) for v in visibility)
+        self.radius = radius
+        self.states: dict[str, StateDecl] = {}
+        self.effects: dict[str, EffectDecl] = {}
+        self.params: dict[str, Any] = {}
+        self.emits: list[Emit] = []
+        self.updates: dict[str, Expr] = {}
+        self.alive_rule: Expr | None = None
+
+    # ---- declarations -----------------------------------------------------
+    def state(
+        self,
+        name: str,
+        dtype=jnp.float32,
+        reach: float | None = None,
+        wrap: float | None = None,
+    ):
+        if name in self.states:
+            raise ValueError(f"duplicate state field {name!r}")
+        self.states[name] = StateDecl(name, dtype=dtype, reach=reach, wrap=wrap)
+        return self
+
+    def effect(self, name: str, comb: str = "sum", dtype=jnp.float32, payload=()):
+        if name in self.effects:
+            raise ValueError(f"duplicate effect field {name!r}")
+        payload = tuple(
+            (p, (), jnp.float32) if isinstance(p, str) else tuple(p) for p in payload
+        )
+        self.effects[name] = EffectDecl(name, comb=comb, dtype=dtype, payload=payload)
+        return self
+
+    def param(self, name: str, default: Any):
+        self.params[name] = default
+        return self
+
+    # ---- query phase (the foreach body) ------------------------------------
+    def emit(self, target: str, effect: str, value, where=None):
+        if target not in ("self", "other"):
+            raise ValueError("emit target must be 'self' or 'other'")
+        if effect not in self.effects:
+            raise ValueError(f"unknown effect field {effect!r}")
+        decl = self.effects[effect]
+        if decl.comb in ("min_by", "max_by"):
+            if not isinstance(value, dict) or "key" not in value:
+                raise ValueError(
+                    f"{decl.comb} emission needs a dict with 'key' (+payloads)"
+                )
+            value = {k: wrap(v) for k, v in value.items()}
+        else:
+            value = wrap(value)
+        self.emits.append(
+            Emit(target, effect, value, None if where is None else wrap(where))
+        )
+        return self
+
+    # ---- update phase -------------------------------------------------------
+    def update(self, state: str, value):
+        if state not in self.states:
+            raise ValueError(f"unknown state field {state!r}")
+        if state in self.updates:
+            raise ValueError(f"duplicate update rule for {state!r}")
+        self.updates[state] = wrap(value)
+        return self
+
+    def kill(self, cond):
+        """alive ← alive ∧ ¬cond, evaluated in the update phase."""
+        self.alive_rule = wrap(cond)
+        return self

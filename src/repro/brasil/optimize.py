@@ -1,0 +1,100 @@
+"""Algebraic optimizations on BRASIL programs (paper §4.2).
+
+* ``invert_effects`` — the paper's headline rewrite (Theorems 2/3): rewrite
+  non-local (scatter, target="other") effect assignments into local (gather,
+  target="self") ones by swapping SELF↔OTHER in the emission's value and
+  guard expressions.  In the embedded DSL every emission is pairwise and
+  guarded by the class's visibility predicate; our predicates (per-axis
+  boxes ∩ optional L2 ball, evaluated on position *differences*) are
+  symmetric, so inversion is exact at the same bound — this is the Thm 2
+  situation specialized to pairwise programs.  Thm 3's doubled bound covers
+  the proxy pattern (a reads b, writes c) which the pairwise foreach API
+  cannot express; ``widen_visibility`` is provided for completeness and used
+  by the distributed runtime's temporal-blocking mode.
+
+* ``eliminate_dead_effects`` — drop effect fields (and their emissions) that
+  no update rule or kill condition reads; the data-flow analogue of
+  dead-code elimination mentioned in App. B.1.
+
+* ``fold_program_constants`` — constant folding over every expression.
+"""
+
+from __future__ import annotations
+
+import copy
+
+from . import ast as A
+from .fields import AgentClass, Emit
+
+
+def invert_effects(cls: AgentClass) -> AgentClass:
+    """Return a copy with every non-local emission made local (Thm 2)."""
+    out = copy.deepcopy(cls)
+    new_emits = []
+    for e in out.emits:
+        if e.target == "other":
+            value = (
+                {k: A.swap_roles(v) for k, v in e.value.items()}
+                if isinstance(e.value, dict)
+                else A.swap_roles(e.value)
+            )
+            where = None if e.where is None else A.swap_roles(e.where)
+            new_emits.append(Emit("self", e.effect, value, where))
+        else:
+            new_emits.append(e)
+    out.emits = new_emits
+    return out
+
+
+def widen_visibility(cls: AgentClass, factor: float = 2.0) -> AgentClass:
+    """Thm 3: a wider bound lets a local-only script observe everything a
+    proxy could relay; also used for temporal blocking halos."""
+    out = copy.deepcopy(cls)
+    out.visibility = tuple(v * factor for v in out.visibility)
+    if out.radius is not None:
+        out.radius = out.radius * factor
+    return out
+
+
+def _read_effects(cls: AgentClass) -> set[str]:
+    read: set[str] = set()
+    exprs = list(cls.updates.values())
+    if cls.alive_rule is not None:
+        exprs.append(cls.alive_rule)
+    for expr in exprs:
+        for node in A.walk(expr):
+            if isinstance(node, A.Ref) and node.kind == "effect":
+                read.add(node.name)
+    return read
+
+
+def eliminate_dead_effects(cls: AgentClass) -> AgentClass:
+    read = _read_effects(cls)
+    out = copy.deepcopy(cls)
+    out.effects = {k: v for k, v in out.effects.items() if k in read}
+    out.emits = [e for e in out.emits if e.effect in read]
+    return out
+
+
+def fold_program_constants(cls: AgentClass) -> AgentClass:
+    out = copy.deepcopy(cls)
+    for e in out.emits:
+        if isinstance(e.value, dict):
+            e.value = {k: A.fold_constants(v) for k, v in e.value.items()}
+        else:
+            e.value = A.fold_constants(e.value)
+        if e.where is not None:
+            e.where = A.fold_constants(e.where)
+    out.updates = {k: A.fold_constants(v) for k, v in out.updates.items()}
+    if out.alive_rule is not None:
+        out.alive_rule = A.fold_constants(out.alive_rule)
+    return out
+
+
+def optimize(cls: AgentClass, invert: bool = True) -> AgentClass:
+    """The default pipeline: fold → DCE → (optionally) invert."""
+    out = fold_program_constants(cls)
+    out = eliminate_dead_effects(out)
+    if invert:
+        out = invert_effects(out)
+    return out

@@ -1,0 +1,1 @@
+from .base import ArchConfig, ShapeSpec, SHAPES, all_archs, get_arch, reduced, supports  # noqa: F401

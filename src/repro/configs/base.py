@@ -1,0 +1,219 @@
+"""Architecture + shape registry for the assigned evaluation pool.
+
+Every architecture is a selectable config (``--arch <id>``); every
+(arch × shape) cell is exercised by the multi-pod dry-run
+(launch/dryrun.py) and recorded in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: int | None = None  # sliding-window attention
+    rope_theta: float = 10000.0
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    # SSM (Mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    shared_attn_period: int = 0  # zamba2: shared attn block every k layers
+    # RWKV6
+    rwkv_head_size: int = 64
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_frames_divisor: int = 4  # stub conv frontend downsampling factor
+    act: str = "swiglu"  # swiglu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: bool = True
+    # gradient-accumulation microbatches for train_4k (memory, not math):
+    # activation-linked buffers scale with the per-microbatch batch
+    train_microbatches: int = 1
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D roofline bookkeeping)."""
+        d = self.d_model
+        emb = self.vocab * d
+        head = 0 if self.tie_embeddings else self.vocab * d
+        per_layer = 0
+        if self.family == "ssm":  # rwkv6
+            h = d // self.rwkv_head_size
+            # time-mix: r,k,v,g,o (d×d) + decay lora (d×64×2) + ffn
+            per_layer = 5 * d * d + 2 * d * 64 + d * 64 * 2 + 2 * d * self.d_ff
+            per_layer += 4 * d  # norms, mixes
+        else:
+            attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv_heads * self.d_head
+            attn += self.n_heads * self.d_head * d
+            if self.is_moe:
+                ffn = self.n_experts * 3 * d * self.d_expert
+                ffn += self.n_shared_experts * 3 * d * self.d_expert
+                ffn += d * self.n_experts  # router
+            elif self.act == "swiglu":
+                ffn = 3 * d * self.d_ff
+            else:
+                ffn = 2 * d * self.d_ff
+            if self.family == "hybrid":
+                din = self.ssm_expand * d
+                mamba = d * (2 * din + 2 * self.ssm_state) + din * d
+                per_layer = mamba + 2 * d
+                shared = attn + 3 * d * self.d_ff
+                n_shared_blocks = 1  # tied weights
+                return (
+                    emb + head + self.n_layers * per_layer + shared * n_shared_blocks
+                )
+            per_layer = attn + ffn + 2 * d
+        total = emb + head + self.n_layers * per_layer
+        if self.family == "encdec":
+            enc_layer = (
+                d * self.n_heads * self.d_head * 2
+                + 2 * d * self.n_kv_heads * self.d_head
+                + 2 * d * self.d_ff
+                + 2 * d
+            )
+            cross = d * self.n_heads * self.d_head * 2 + 2 * d * self.n_kv_heads * self.d_head
+            total += self.n_enc_layers * enc_layer + self.n_layers * cross
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE routing)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        routed_all = self.n_experts * 3 * d * self.d_expert
+        routed_active = self.top_k * 3 * d * self.d_expert
+        return self.param_count() - self.n_layers * (routed_all - routed_active)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports(arch: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (SWA / SSM / hybrid).
+
+    Returns (supported, reason-if-not).
+    """
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            arch.family in ("ssm", "hybrid") or arch.window is not None
+        )
+        if not sub_quadratic:
+            return False, (
+                "pure full attention — 512k decode context is quadratic; "
+                "skipped per assignment (see DESIGN.md §Arch-applicability)"
+            )
+    return True, ""
+
+
+_REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+
+
+def all_archs() -> list[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    from . import (  # noqa: F401
+        chameleon_34b,
+        deepseek_moe_16b,
+        granite_8b,
+        h2o_danube3_4b,
+        mixtral_8x22b,
+        qwen15_110b,
+        qwen2_7b,
+        rwkv6_7b,
+        whisper_base,
+        zamba2_1p2b,
+    )
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """A small same-family config for CPU smoke tests."""
+    small = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)) if cfg.n_kv_heads else 0,
+        d_head=16,
+        d_ff=128,
+        vocab=256,
+        scan_layers=False,
+        remat=False,
+        dtype="float32",
+    )
+    if cfg.is_moe:
+        # capacity_factor = E makes the reduced config drop-free, so the
+        # serve path can be checked exactly against the full forward
+        small.update(n_experts=4, top_k=min(2, cfg.top_k), d_expert=32,
+                     n_shared_experts=min(1, cfg.n_shared_experts),
+                     capacity_factor=4.0)
+    if cfg.family in ("hybrid", "ssm"):
+        small.update(ssm_state=8, ssm_head_dim=16, rwkv_head_size=16)
+    if cfg.family == "hybrid":
+        small.update(shared_attn_period=2, n_kv_heads=4)
+    if cfg.family == "encdec":
+        small.update(n_enc_layers=2)
+    if cfg.window is not None:
+        small.update(window=32)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

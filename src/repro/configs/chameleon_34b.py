@@ -1,0 +1,11 @@
+"""chameleon-34b [vlm]: early-fusion backbone over unified text+VQ-image
+token vocabulary; tokenizer frontend is a STUB.  Uses qk-norm
+[arXiv:2405.09818; unverified]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="chameleon-34b", family="dense",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, d_head=128,
+    d_ff=22016, vocab=65536, qk_norm=True,
+    train_microbatches=4,
+))

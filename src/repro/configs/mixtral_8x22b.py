@@ -1,0 +1,10 @@
+"""mixtral-8x22b [moe]: 8 experts top-2 with SWA [arXiv:2401.04088; hf]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, d_head=128,
+    d_ff=16384, vocab=32768, window=4096,
+    n_experts=8, n_shared_experts=0, top_k=2, d_expert=16384,
+    train_microbatches=8,
+))

@@ -1,0 +1,9 @@
+"""rwkv6-7b [ssm]: Finch — attention-free, data-dependent decay
+[arXiv:2404.05892; hf]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=0, n_kv_heads=0, d_head=0,
+    d_ff=14336, vocab=65536, rwkv_head_size=64,
+))

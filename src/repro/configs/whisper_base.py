@@ -1,0 +1,11 @@
+"""whisper-base [audio]: enc-dec transformer backbone; the conv frontend is
+a STUB (input_specs provides precomputed frame embeddings)
+[arXiv:2212.04356; unverified]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-base", family="encdec",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8, d_head=64,
+    d_ff=2048, vocab=51865,
+    n_enc_layers=6, act="gelu", norm="layernorm",
+))

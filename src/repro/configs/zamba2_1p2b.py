@@ -1,0 +1,11 @@
+"""zamba2-1.2b [hybrid]: Mamba2 backbone + shared (tied-weight) attention
+blocks [arXiv:2411.15242; hf]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_head=64,
+    d_ff=8192, vocab=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, shared_attn_period=6,
+    train_microbatches=2,
+))

@@ -1,0 +1,7 @@
+"""BRACE core: agents, combinators, spatial joins, the state-effect tick,
+the single-node engine and the distributed shard_map runtime."""
+
+from .agents import AgentState, EffectSpec, FieldSpec  # noqa: F401
+from .engine import Engine, Simulation, uniform_population  # noqa: F401
+from .join import Visibility  # noqa: F401
+from .tick import TickPlan  # noqa: F401

@@ -1,0 +1,118 @@
+"""Agent containers: fixed-capacity struct-of-arrays with alive masks.
+
+The paper stores agents as C++ objects; a TPU-native runtime needs static
+shapes and vectorized access, so a population is a struct-of-arrays
+``AgentState`` with a boolean ``alive`` mask (dead/free slots are reusable —
+see the predator simulation's spawn logic).  Effects are *transient*: they
+are created at the start of the query phase (reset to the combinator
+identity θ, paper App. A) and consumed by the update phase, so they are not
+part of the persistent state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    """A state field: public attribute updated only at tick boundaries."""
+
+    name: str
+    shape: tuple = ()
+    dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class EffectSpec:
+    """An effect field with its ⊕ combinator (and payloads for *_BY)."""
+
+    name: str
+    comb: str = "sum"  # key into combinators.REGISTRY
+    shape: tuple = ()
+    dtype: Any = jnp.float32
+    payload: tuple = ()  # tuple[(name, shape, dtype)] for min_by/max_by
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AgentState:
+    """Struct-of-arrays agent population (capacity = alive.shape[0])."""
+
+    alive: Array  # bool[N]
+    oid: Array    # int32[N] stable agent id
+    fields: dict[str, Array]  # each [N, *field_shape]
+
+    @property
+    def capacity(self) -> int:
+        return self.alive.shape[0]
+
+    def num_alive(self) -> Array:
+        return jnp.sum(self.alive.astype(jnp.int32))
+
+    def replace_fields(self, **updates: Array) -> "AgentState":
+        new = dict(self.fields)
+        new.update(updates)
+        return AgentState(alive=self.alive, oid=self.oid, fields=new)
+
+
+def init_state(field_specs: list[FieldSpec], capacity: int) -> AgentState:
+    """All-dead population of the given capacity."""
+    fields = {
+        f.name: jnp.zeros((capacity,) + tuple(f.shape), f.dtype) for f in field_specs
+    }
+    return AgentState(
+        alive=jnp.zeros((capacity,), bool),
+        oid=jnp.zeros((capacity,), jnp.int32),
+        fields=fields,
+    )
+
+
+def from_numpy(field_specs: list[FieldSpec], capacity: int, oid, **arrays) -> AgentState:
+    """Build a state from per-agent numpy/jnp arrays (n <= capacity)."""
+    n = len(oid)
+    if n > capacity:
+        raise ValueError(f"{n} agents exceed capacity {capacity}")
+    state = init_state(field_specs, capacity)
+    alive = state.alive.at[:n].set(True)
+    oid_arr = state.oid.at[:n].set(jnp.asarray(oid, jnp.int32))
+    fields = {}
+    for f in field_specs:
+        tgt = state.fields[f.name]
+        if f.name in arrays:
+            src = jnp.asarray(arrays[f.name], f.dtype)
+            tgt = tgt.at[:n].set(src)
+        fields[f.name] = tgt
+    return AgentState(alive=alive, oid=oid_arr, fields=fields)
+
+
+def take(state: AgentState, idx: Array) -> AgentState:
+    """Gather agents by slot index (out-of-range rows must be masked by caller)."""
+    return AgentState(
+        alive=state.alive[idx],
+        oid=state.oid[idx],
+        fields={k: v[idx] for k, v in state.fields.items()},
+    )
+
+
+def concatenate(states: list[AgentState]) -> AgentState:
+    return AgentState(
+        alive=jnp.concatenate([s.alive for s in states]),
+        oid=jnp.concatenate([s.oid for s in states]),
+        fields={
+            k: jnp.concatenate([s.fields[k] for s in states])
+            for k in states[0].fields
+        },
+    )
+
+
+def compact(state: AgentState) -> AgentState:
+    """Pack alive agents to the front (stable order by slot)."""
+    order = jnp.argsort(~state.alive, stable=True)
+    return take(state, order)

@@ -1,0 +1,194 @@
+"""Effect combinators (the paper's ⊕ operators).
+
+The state-effect pattern requires every effect field to carry a
+*decomposable, order-independent* combinator so that concurrent effect
+assignments during the query phase commute (paper §2.1).  Each combinator
+provides:
+
+  * ``identity``   — the θ vector used to reset effects at tick boundaries,
+  * ``combine``    — the binary ⊕ (associative + commutative), used by
+                     reduce₂ when partial aggregates from remote partitions
+                     are merged (paper Fig. 10),
+  * ``reduce``     — a masked reduction over a candidate axis (the vectorized
+                     foreach-loop in the query phase),
+  * ``scatter``    — ⊕-scatter of contributions into a target agent's effect
+                     slot (non-local effect assignment, paper §3.2).
+
+Values are either plain arrays or — for the ``*_BY`` argmin/argmax style
+combinators needed by e.g. the traffic simulation ("nearest lead vehicle") —
+dicts ``{"key": arr, <payload>: arr, ...}``.  ``MIN_BY``/``MAX_BY`` are
+decomposable and order-independent (ties broken deterministically by key
+then payload order), so they are legal effect combinators under the paper's
+definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _masked(x: Array, mask: Array, fill) -> Array:
+    mask = jnp.reshape(mask, mask.shape + (1,) * (x.ndim - mask.ndim))
+    return jnp.where(mask, x, jnp.asarray(fill, dtype=x.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class Combinator:
+    """A decomposable, order-independent effect aggregation operator."""
+
+    name: str
+    # identity element for a plain array of (shape, dtype)
+    _identity: Callable[[tuple, Any], Array]
+    _combine: Callable[[Array, Array], Array]
+    _reduce: Callable[[Array, Array, int], Array]  # (contrib, mask, axis)
+    _scatter: Callable[[Array, Array, Array, Array], Array] | None  # (tgt, idx, contrib, mask)
+
+    # ---- plain-array protocol -------------------------------------------------
+    def identity(self, shape: tuple, dtype: Any) -> Array:
+        return self._identity(shape, dtype)
+
+    def combine(self, a: Array, b: Array) -> Array:
+        return self._combine(a, b)
+
+    def reduce(self, contrib: Array, mask: Array, axis: int = 1) -> Array:
+        return self._reduce(contrib, mask, axis)
+
+    def scatter(self, target: Array, idx: Array, contrib: Array, mask: Array) -> Array:
+        if self._scatter is None:
+            raise NotImplementedError(
+                f"combinator {self.name!r} does not support non-local (scatter) "
+                "effect assignment; use effect inversion to make it local"
+            )
+        return self._scatter(target, idx, contrib, mask)
+
+
+# ---------------------------------------------------------------------------
+# SUM / MIN / MAX / OR / AND
+# ---------------------------------------------------------------------------
+
+def _scatter_via(op_name: str):
+    def scatter(target, idx, contrib, mask, *, fill):
+        # Drop masked-out contributions into a dump row one past the end.
+        n = target.shape[0]
+        safe_idx = jnp.where(mask, idx, n)
+        padded = jnp.concatenate(
+            [target, target[:1]], axis=0
+        )  # dump row (value irrelevant)
+        contrib = _masked(contrib, mask, fill)
+        flat_idx = safe_idx.reshape(-1)
+        flat_contrib = contrib.reshape((-1,) + contrib.shape[idx.ndim:])
+        updated = getattr(padded.at[flat_idx], op_name)(flat_contrib)
+        return updated[:n]
+
+    return scatter
+
+
+SUM = Combinator(
+    "sum",
+    _identity=lambda shape, dtype: jnp.zeros(shape, dtype),
+    _combine=lambda a, b: a + b,
+    _reduce=lambda c, m, ax: jnp.sum(_masked(c, m, 0), axis=ax),
+    _scatter=lambda t, i, c, m: _scatter_via("add")(t, i, c, m, fill=0),
+)
+
+_BIG = 3.0e38  # below f32 max; used as +/- inf that survives arithmetic
+
+MIN = Combinator(
+    "min",
+    _identity=lambda shape, dtype: jnp.full(shape, _BIG, dtype),
+    _combine=lambda a, b: jnp.minimum(a, b),
+    _reduce=lambda c, m, ax: jnp.min(_masked(c, m, _BIG), axis=ax),
+    _scatter=lambda t, i, c, m: _scatter_via("min")(t, i, c, m, fill=_BIG),
+)
+
+MAX = Combinator(
+    "max",
+    _identity=lambda shape, dtype: jnp.full(shape, -_BIG, dtype),
+    _combine=lambda a, b: jnp.maximum(a, b),
+    _reduce=lambda c, m, ax: jnp.max(_masked(c, m, -_BIG), axis=ax),
+    _scatter=lambda t, i, c, m: _scatter_via("max")(t, i, c, m, fill=-_BIG),
+)
+
+OR = Combinator(
+    "or",
+    _identity=lambda shape, dtype: jnp.zeros(shape, dtype=bool),
+    _combine=lambda a, b: jnp.logical_or(a, b),
+    _reduce=lambda c, m, ax: jnp.any(jnp.logical_and(c, m), axis=ax),
+    _scatter=lambda t, i, c, m: _scatter_via("max")(t, i, c.astype(t.dtype), m, fill=0),
+)
+
+
+# ---------------------------------------------------------------------------
+# MIN_BY / MAX_BY — argopt combinators over {"key": ..., payload...} dicts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArgOptCombinator:
+    """Selects the whole record whose key is smallest (MIN_BY) / largest (MAX_BY).
+
+    Decomposable and order-independent: ⊕ keeps the record with the better
+    key (ties keep either — with distinct float keys in the sims this is a
+    measure-zero event; determinism is preserved within a fixed reduction
+    order, and across orders only up to key ties).
+    """
+
+    name: str
+    sign: float  # +1 for MIN_BY, -1 for MAX_BY
+
+    def identity(self, payload_specs: dict[str, tuple[tuple, Any]]) -> dict[str, Array]:
+        out = {"key": jnp.full((), self.sign * _BIG, jnp.float32)}
+        for pname, (shape, dtype) in payload_specs.items():
+            out[pname] = jnp.zeros(shape, dtype)
+        return out
+
+    def combine(self, a: dict[str, Array], b: dict[str, Array]) -> dict[str, Array]:
+        take_a = (self.sign * a["key"]) <= (self.sign * b["key"])
+        return {
+            k: jnp.where(jnp.reshape(take_a, take_a.shape + (1,) * (a[k].ndim - take_a.ndim)), a[k], b[k])
+            for k in a
+        }
+
+    def reduce(self, contrib: dict[str, Array], mask: Array, axis: int = 1) -> dict[str, Array]:
+        key = _masked(contrib["key"] * self.sign, mask, _BIG)
+        sel = jnp.argmin(key, axis=axis)  # [N]
+        out = {}
+        for k, v in contrib.items():
+            idx = jnp.expand_dims(sel, axis)  # [N, 1]
+            idx = jnp.reshape(idx, idx.shape + (1,) * (v.ndim - idx.ndim))
+            taken = jnp.take_along_axis(v, idx, axis=axis)
+            out[k] = jnp.squeeze(taken, axis=axis)
+        # if nothing was selected (all masked), fall back to the identity key
+        none = ~jnp.any(mask, axis=axis)
+        out["key"] = jnp.where(none, self.sign * _BIG, out["key"])
+        return out
+
+    def scatter(self, *a, **k):  # pragma: no cover - guarded by compiler
+        raise NotImplementedError(
+            f"{self.name} does not support non-local assignment; invert the effect"
+        )
+
+
+MIN_BY = ArgOptCombinator("min_by", +1.0)
+MAX_BY = ArgOptCombinator("max_by", -1.0)
+
+REGISTRY: dict[str, Any] = {
+    "sum": SUM,
+    "min": MIN,
+    "max": MAX,
+    "or": OR,
+    "min_by": MIN_BY,
+    "max_by": MAX_BY,
+}
+
+
+def get(name: str):
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown combinator {name!r}; available: {sorted(REGISTRY)}")

@@ -1,0 +1,448 @@
+"""BRACE distributed runtime: map-reduce-reduce over a shard_map mesh.
+
+The paper's dataflow (§3.2, Fig. 9/10) maps onto TPU collectives as:
+
+  map₁   (update + distribute + replicate)  →  migration ppermute (bounded by
+         reachability) + **halo exchange** ppermute (bounded by visibility)
+  reduce₁ (query phase over owned ∪ replicas) →  local spatial join; only the
+         ownership-masked rows execute their query
+  map₂   (identity, "can be eliminated")     →  eliminated, exactly as §3.2
+  reduce₂ (⊕-combine non-local partials)     →  reverse ppermute of halo
+         partial-effect buffers, ⊕-scatter at the owner
+
+The whole epoch (``ticks_per_epoch`` iterations) runs inside one jitted
+``shard_map`` call — the paper's "master only interacts with workers every
+epoch" taken to its in-memory extreme: zero host round-trips within an
+epoch.  Collocation (§3.3) is implicit: an agent that stays in its slab
+never leaves device HBM; only halo replicas and migrants touch the ICI.
+
+Partitioning is 1-D over the x axis (slabs), matching the paper's 1-D load
+balancer.  Slab boundaries are a *dynamic* input, so the master can
+rebalance between epochs without recompiling.
+
+Requirements checked at build time: P ≥ 2, slab width ≥ visibility (halo =
+one neighbor hop) and ≥ reach (migration = one neighbor hop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import combinators as combs
+from . import grid as gridlib
+from .agents import AgentState, concatenate, take
+from .engine import Simulation
+from .join import run_query
+from .tick import TickPlan, update_phase
+
+Array = jax.Array
+AXIS = "space"
+
+
+# ---------------------------------------------------------------------------
+# buffer packing
+# ---------------------------------------------------------------------------
+
+def pack(state: AgentState, mask: Array, size: int):
+    """Select up to ``size`` masked agents into a fixed-size buffer.
+
+    Returns (buffer AgentState [size], src_idx [size], overflow count).
+    Buffer rows beyond the masked population are dead (alive=False).
+    """
+    k = state.capacity
+    prio = jnp.where(mask, jnp.arange(k, dtype=jnp.int32), k)
+    order = jnp.argsort(prio)[:size]
+    buf = take(state, order)
+    valid = mask[order]
+    buf = AgentState(alive=buf.alive & valid, oid=buf.oid, fields=buf.fields)
+    overflow = jnp.maximum(0, jnp.sum(mask.astype(jnp.int32)) - size)
+    return buf, order.astype(jnp.int32), overflow
+
+
+def merge_into_free_slots(state: AgentState, incoming: AgentState):
+    """Place incoming (alive) agents into this shard's free slots."""
+    k, m = state.capacity, incoming.capacity
+    free_order = jnp.argsort(state.alive)[:m]  # False sorts first
+    n_free = jnp.sum((~state.alive).astype(jnp.int32))
+    placeable = incoming.alive & (jnp.arange(m) < n_free)
+    overflow = jnp.sum(incoming.alive.astype(jnp.int32)) - jnp.sum(
+        placeable.astype(jnp.int32)
+    )
+
+    def put(dst, src):
+        cur = dst[free_order]
+        sel = jnp.reshape(placeable, placeable.shape + (1,) * (src.ndim - 1))
+        return dst.at[free_order].set(jnp.where(sel, src, cur))
+
+    fields = {kf: put(state.fields[kf], incoming.fields[kf]) for kf in state.fields}
+    alive = state.alive.at[free_order].set(
+        jnp.where(placeable, True, state.alive[free_order])
+    )
+    oid = put(state.oid, incoming.oid)
+    return AgentState(alive=alive, oid=oid, fields=fields), overflow
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    n_parts: int
+    capacity: int        # owned slots per device
+    halo_capacity: int   # halo buffer slots per side
+    mig_capacity: int    # migration buffer slots per side
+    periodic: bool
+    world_lo: tuple[float, float]
+    world_hi: tuple[float, float]
+    grid: gridlib.GridSpec | None  # local per-slab grid (None = no index)
+    two_pass: bool       # map-reduce-reduce (non-local effects present)
+
+    @property
+    def local_rows(self) -> int:
+        return self.capacity + 2 * self.halo_capacity
+
+
+def plan_config(
+    sim: Simulation,
+    n_parts: int,
+    n_agents_hint: int,
+    index: str = "grid",
+    capacity_factor: float = 3.0,
+    halo_fraction: float = 0.5,
+    two_pass: bool | None = None,
+    cell_capacity: int | None = None,
+) -> DistConfig:
+    plan = sim.plan
+    world_lo, world_hi = sim.world_lo, sim.world_hi
+    extent_x = world_hi[0] - world_lo[0]
+    vis_x = plan.visibility.bounds[0]
+    periodic = plan.visibility.periods[0] is not None
+    if n_parts < 2:
+        raise ValueError("distributed runtime needs ≥ 2 partitions; use Engine")
+    min_slab = extent_x / n_parts  # load balancer enforces ≥ this / slack
+    if periodic and min_slab < 2 * vis_x:
+        raise ValueError(
+            f"slab width {min_slab:.3g} < 2×visibility {2 * vis_x:.3g}: "
+            "halo replicas would alias around the ring"
+        )
+
+    capacity = max(16, int(math.ceil(n_agents_hint / n_parts * capacity_factor)))
+    halo_capacity = max(16, int(capacity * halo_fraction))
+    mig_capacity = max(16, int(capacity * halo_fraction / 2))
+
+    grid = None
+    if index == "grid":
+        # local grid covers the widest slab the balancer may produce (4× the
+        # mean width) plus one visibility margin per side; out-of-extent
+        # agents clamp into border cells (correct, just denser — grid.py).
+        slab_extent = extent_x / n_parts * 4.0 + 2 * vis_x
+        grid = gridlib.make_grid(
+            (slab_extent, world_hi[1] - world_lo[1]),
+            plan.visibility.bounds,
+            n_agents_hint // n_parts * 4,
+            capacity_factor=capacity_factor * 2,  # grid slots are cheap ints
+            periodic=(False, False),  # wrap handled by the halo ring
+            cell_capacity=cell_capacity,
+        )
+    if two_pass is None:
+        two_pass = plan.has_nonlocal
+    return DistConfig(
+        n_parts=n_parts,
+        capacity=capacity,
+        halo_capacity=halo_capacity,
+        mig_capacity=mig_capacity,
+        periodic=periodic,
+        world_lo=world_lo,
+        world_hi=world_hi,
+        grid=grid,
+        two_pass=two_pass,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the per-epoch shard_map body
+# ---------------------------------------------------------------------------
+
+def _perms(p: int, periodic: bool):
+    left = [(i, i - 1) for i in range(1, p)]
+    right = [(i, i + 1) for i in range(p - 1)]
+    if periodic:
+        left.append((0, p - 1))
+        right.append((p - 1, 0))
+    return left, right
+
+
+def _ppermute(tree, perm):
+    return jax.tree.map(lambda a: jax.lax.ppermute(a, AXIS, perm), tree)
+
+
+def make_epoch_fn(plan: TickPlan, params: dict, cfg: DistConfig):
+    """Build the shard_map body: (shard, bounds, rng, t0, n_ticks) → shard."""
+    xf, yf = plan.visibility.pos_fields
+    vis_x = plan.visibility.bounds[0]
+    period = plan.visibility.periods[0]
+    perm_left, perm_right = _perms(cfg.n_parts, cfg.periodic)
+    extent_x = cfg.world_hi[0] - cfg.world_lo[0]
+    scatterable = [
+        es for es in plan.effect_specs
+        if not isinstance(combs.get(es.comb), combs.ArgOptCombinator)
+    ]
+
+    def one_tick(state: AgentState, bounds: Array, rng: Array, t: Array):
+        me = jax.lax.axis_index(AXIS)
+        lo = bounds[me]
+        hi = bounds[me + 1]
+        x = state.fields[xf]
+        stats = {}
+
+        # ---- map₁ part 1: migration (distributeᵗ for agents that moved) ----
+        belongs = (x >= lo) & (x < hi)
+        center = (lo + hi) * 0.5
+        d = x - center
+        if cfg.periodic:
+            d = d - extent_x * jnp.round(d / extent_x)
+        go_left = state.alive & ~belongs & (d < 0)
+        go_right = state.alive & ~belongs & (d >= 0)
+        if not cfg.periodic:
+            # edge slabs extend to ±∞: agents past the world box stay put
+            go_left = go_left & (me > 0)
+            go_right = go_right & (me < cfg.n_parts - 1)
+        buf_l, _, ovl = pack(state, go_left, cfg.mig_capacity)
+        buf_r, _, ovr = pack(state, go_right, cfg.mig_capacity)
+        # remove emigrants, then exchange
+        state = AgentState(
+            alive=state.alive & ~(go_left | go_right),
+            oid=state.oid,
+            fields=state.fields,
+        )
+        inc_from_right = _ppermute(buf_l, perm_left)   # right nbr's leftbound
+        inc_from_left = _ppermute(buf_r, perm_right)   # left nbr's rightbound
+        state, ovm1 = merge_into_free_slots(state, inc_from_left)
+        state, ovm2 = merge_into_free_slots(state, inc_from_right)
+        stats["mig_overflow"] = ovl + ovr + ovm1 + ovm2
+        stats["migrated"] = jnp.sum((go_left | go_right).astype(jnp.int32))
+
+        # ---- map₁ part 2: replication (halo exchange) -----------------------
+        x = state.fields[xf]
+        near_left = state.alive & (x < lo + vis_x)
+        near_right = state.alive & (x >= hi - vis_x)
+        send_l, src_l, ohl = pack(state, near_left, cfg.halo_capacity)
+        send_r, src_r, ohr = pack(state, near_right, cfg.halo_capacity)
+        halo_from_right = _ppermute(send_l, perm_left)
+        halo_from_left = _ppermute(send_r, perm_right)
+        stats["halo_overflow"] = ohl + ohr
+        stats["halo"] = jnp.sum(
+            halo_from_left.alive.astype(jnp.int32)
+        ) + jnp.sum(halo_from_right.alive.astype(jnp.int32))
+
+        if cfg.periodic:
+            # unwrap coordinates across the seam so the local grid is
+            # contiguous (visibility masks already wrap)
+            last = cfg.n_parts - 1
+            adj_l = jnp.where(me == 0, -extent_x, 0.0)
+            adj_r = jnp.where(me == last, extent_x, 0.0)
+            halo_from_left = halo_from_left.replace_fields(
+                **{xf: halo_from_left.fields[xf] + adj_l}
+            )
+            halo_from_right = halo_from_right.replace_fields(
+                **{xf: halo_from_right.fields[xf] + adj_r}
+            )
+
+        local = concatenate([state, halo_from_left, halo_from_right])
+        k, h = cfg.capacity, cfg.halo_capacity
+        owned_mask = jnp.arange(local.capacity) < k
+
+        # ---- reduce₁: query phase over owned ∪ replicas ---------------------
+        lx = local.fields[xf]
+        ly = local.fields[yf]
+        if cfg.grid is None:
+            cand, valid = gridlib.brute_candidates(local.capacity)
+        else:
+            glo = (lo - vis_x, cfg.world_lo[1])
+            table, gov = gridlib.build_table(cfg.grid, glo, lx, ly, local.alive)
+            cand, valid = gridlib.candidates(cfg.grid, glo, table, lx, ly)
+            stats["grid_overflow"] = gov
+        effects = run_query(
+            local, cand, valid, plan.pair_fn, plan.effect_specs,
+            plan.visibility, params, self_mask=owned_mask,
+        )
+
+        # ---- reduce₂: return non-local partials to their owners -------------
+        if cfg.two_pass:
+            part_from_left = {es.name: jax.tree.map(lambda a: a[k:k + h], effects[es.name])
+                              for es in scatterable}
+            part_from_right = {es.name: jax.tree.map(lambda a: a[k + h:k + 2 * h], effects[es.name])
+                               for es in scatterable}
+            # partials for halo_from_left go back to the left owner, etc.
+            ret_from_right = _ppermute(part_from_left, perm_left)
+            ret_from_left = _ppermute(part_from_right, perm_right)
+            for es in scatterable:
+                comb = combs.get(es.comb)
+                eff = effects[es.name]
+                # I sent send_r (src_r) to the right; its partials come back
+                # from the right neighbor, and vice versa.
+                eff = comb.scatter(
+                    eff, src_r, ret_from_right[es.name], send_r.alive
+                )
+                eff = comb.scatter(
+                    eff, src_l, ret_from_left[es.name], send_l.alive
+                )
+                effects[es.name] = eff
+
+        owned_effects = {
+            name: jax.tree.map(lambda a: a[:k], val) for name, val in effects.items()
+        }
+
+        # ---- map₁ of t+1 part 0: update phase -------------------------------
+        state = update_phase(plan, state, owned_effects, params, rng, t)
+        stats["alive"] = state.num_alive()
+        return state, stats
+
+    def epoch_fn(state: AgentState, bounds: Array, rng: Array, t0: Array, ticks: Array):
+        def body(carry, i):
+            st = carry
+            key = jax.random.fold_in(rng, t0 + i)
+            st, stats = one_tick(st, bounds, key, t0 + i)
+            return st, stats
+
+        state, stats = jax.lax.scan(body, state, ticks)
+        # leading axis of size 1 per shard → [P, T] outside shard_map
+        stats = {kk: v[None] for kk, v in stats.items()}
+        return state, stats
+
+    return epoch_fn
+
+
+# ---------------------------------------------------------------------------
+# host-side driver
+# ---------------------------------------------------------------------------
+
+class DistEngine:
+    """Distributed BRACE runtime over a 1-D device mesh.
+
+    ``run_epoch`` is the only device round-trip; partitioning, checkpointing
+    and load balancing happen between epochs (see core/master.py).
+    """
+
+    def __init__(
+        self,
+        sim: Simulation,
+        n_agents_hint: int,
+        mesh: jax.sharding.Mesh | None = None,
+        index: str = "grid",
+        capacity_factor: float = 3.0,
+        halo_fraction: float = 0.5,
+        two_pass: bool | None = None,
+        cell_capacity: int | None = None,
+    ):
+        if mesh is None:
+            n = jax.device_count()
+            mesh = jax.make_mesh(
+                (n,), (AXIS,), axis_types=(jax.sharding.AxisType.Auto,)
+            )
+        self.mesh = mesh
+        self.sim = sim
+        self.n_parts = mesh.devices.size
+        self.cfg = plan_config(
+            sim, self.n_parts, n_agents_hint, index=index,
+            capacity_factor=capacity_factor, halo_fraction=halo_fraction,
+            two_pass=two_pass, cell_capacity=cell_capacity,
+        )
+        epoch_fn = make_epoch_fn(sim.plan, sim.params, self.cfg)
+        pspec = jax.sharding.PartitionSpec
+        self._epoch = jax.jit(
+            jax.shard_map(
+                epoch_fn,
+                mesh=mesh,
+                in_specs=(
+                    pspec(AXIS), pspec(), pspec(), pspec(), pspec(),
+                ),
+                out_specs=(pspec(AXIS), pspec(AXIS)),
+            ),
+            donate_argnums=(0,),
+        )
+
+    # -- data placement -----------------------------------------------------
+    def uniform_bounds(self) -> np.ndarray:
+        lo, hi = self.sim.world_lo[0], self.sim.world_hi[0]
+        return np.linspace(lo, hi, self.n_parts + 1)
+
+    def distribute(self, state: AgentState, bounds: np.ndarray) -> AgentState:
+        """Host-side global partitioning (init / rebalance / restore)."""
+        xf = self.sim.plan.visibility.pos_fields[0]
+        alive = np.asarray(state.alive)
+        x = np.asarray(state.fields[xf])
+        k = self.cfg.capacity
+        parts = []
+        placed = 0
+        for p in range(self.n_parts):
+            lo_p = -np.inf if p == 0 else bounds[p]
+            hi_p = np.inf if p == self.n_parts - 1 else bounds[p + 1]
+            inb = alive & (x >= lo_p) & (x < hi_p)
+            idx = np.nonzero(inb)[0][:k]
+            placed += len(idx)
+            part = {
+                "alive": np.zeros(k, bool),
+                "oid": np.zeros(k, np.int32),
+            }
+            part["alive"][: len(idx)] = True
+            part["oid"][: len(idx)] = np.asarray(state.oid)[idx]
+            fields = {}
+            for name, arr in state.fields.items():
+                a = np.asarray(arr)
+                out = np.zeros((k,) + a.shape[1:], a.dtype)
+                out[: len(idx)] = a[idx]
+                fields[name] = out
+            part["fields"] = fields
+            parts.append(part)
+        total_alive = int(alive.sum())
+        if placed < total_alive:
+            raise RuntimeError(
+                f"partitioning dropped {total_alive - placed} agents "
+                f"(per-device capacity {k} too small)"
+            )
+        glob = AgentState(
+            alive=jnp.asarray(np.concatenate([p["alive"] for p in parts])),
+            oid=jnp.asarray(np.concatenate([p["oid"] for p in parts])),
+            fields={
+                name: jnp.asarray(
+                    np.concatenate([p["fields"][name] for p in parts])
+                )
+                for name in parts[0]["fields"]
+            },
+        )
+        sharding = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec(AXIS)
+        )
+        return jax.device_put(glob, sharding)
+
+    def gather(self, state: AgentState) -> AgentState:
+        """Pull the sharded population back to host memory (epoch boundary)."""
+        return jax.tree.map(lambda a: jnp.asarray(jax.device_get(a)), state)
+
+    # -- execution ------------------------------------------------------------
+    def run_epoch(
+        self,
+        state: AgentState,
+        bounds: np.ndarray,
+        n_ticks: int,
+        seed: int = 0,
+        t0: int = 0,
+    ):
+        rng = jax.random.PRNGKey(seed)
+        ticks = jnp.arange(n_ticks, dtype=jnp.int32)
+        state, stats = self._epoch(
+            state,
+            jnp.asarray(bounds, jnp.float32),
+            rng,
+            jnp.asarray(t0, jnp.int32),
+            ticks,
+        )
+        return state, jax.device_get(stats)

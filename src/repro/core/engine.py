@@ -1,0 +1,155 @@
+"""Single-node BRACE engine: compile a BRASIL class and run epochs of ticks.
+
+The single-node engine is both (a) the baseline used in the paper's
+single-node experiments (Figs. 3/4, Table 2) and (b) the oracle against
+which the distributed runtime is verified (tests/test_distribute.py).
+
+Ticks inside an epoch are fused with ``lax.scan`` inside a single jitted
+call — the in-memory analogue of the paper's "master interacts with workers
+only every epoch".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from typing import TYPE_CHECKING
+
+from . import grid as gridlib
+
+if TYPE_CHECKING:  # avoid a core↔brasil import cycle at runtime
+    from ..brasil.fields import AgentClass
+from .agents import AgentState, from_numpy
+from .tick import TickPlan, make_tick
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Simulation:
+    """A compiled simulation: program + world box + parameters."""
+
+    agent_class: "AgentClass"
+    plan: TickPlan
+    params: dict[str, Any]
+    world_lo: tuple[float, float]
+    world_hi: tuple[float, float]
+
+    @classmethod
+    def build(
+        cls,
+        agent_class: "AgentClass",
+        world_lo: tuple[float, float],
+        world_hi: tuple[float, float],
+        overrides: dict[str, Any] | None = None,
+    ) -> "Simulation":
+        from ..brasil.compiler import compile_agent
+
+        params = dict(agent_class.params)
+        if overrides:
+            unknown = set(overrides) - set(params)
+            if unknown:
+                raise KeyError(f"unknown params {sorted(unknown)}")
+            params.update(overrides)
+        plan = compile_agent(agent_class)
+        return cls(agent_class, plan, params, tuple(world_lo), tuple(world_hi))
+
+    def init_population(self, capacity: int, oid, **arrays) -> AgentState:
+        from ..brasil.compiler import field_specs
+
+        return from_numpy(field_specs(self.agent_class), capacity, oid, **arrays)
+
+    def make_grid(
+        self,
+        n_agents: int,
+        capacity_factor: float = 3.0,
+        cell_capacity: int | None = None,
+    ) -> gridlib.GridSpec:
+        extent = (
+            self.world_hi[0] - self.world_lo[0],
+            self.world_hi[1] - self.world_lo[1],
+        )
+        periodic = tuple(p is not None for p in self.plan.visibility.periods)
+        return gridlib.make_grid(
+            extent,
+            self.plan.visibility.bounds,
+            n_agents,
+            capacity_factor=capacity_factor,
+            periodic=periodic,
+            cell_capacity=cell_capacity,
+        )
+
+
+class Engine:
+    """Single-device driver.  ``index='grid'`` (cell lists) or ``'brute'``."""
+
+    def __init__(
+        self,
+        sim: Simulation,
+        n_agents_hint: int,
+        index: str = "grid",
+        capacity_factor: float = 3.0,
+        cell_capacity: int | None = None,
+    ):
+        self.sim = sim
+        self.index = index
+        self.grid_spec = (
+            sim.make_grid(n_agents_hint, capacity_factor, cell_capacity)
+            if index == "grid"
+            else None
+        )
+        self._tick = make_tick(
+            sim.plan, sim.params, self.grid_spec, grid_lo=sim.world_lo
+        )
+        self._run_jit = jax.jit(self._run, static_argnames=("n_ticks",))
+
+    def _run(self, state: AgentState, rng: Array, t0: Array, n_ticks: int):
+        def body(carry, i):
+            st = carry
+            key = jax.random.fold_in(rng, i)
+            st = self._tick(st, key, t0 + i)
+            return st, st.num_alive()
+
+        state, alive_counts = jax.lax.scan(
+            body, state, jnp.arange(n_ticks, dtype=jnp.int32)
+        )
+        return state, alive_counts
+
+    def run(self, state: AgentState, n_ticks: int, seed: int = 0, t0: int = 0):
+        rng = jax.random.PRNGKey(seed)
+        return self._run_jit(state, rng, jnp.asarray(t0, jnp.int32), n_ticks)
+
+    def query_effects(self, state: AgentState):
+        """Debug probe: effects after one query phase (no update)."""
+        from .tick import query_phase
+
+        return jax.jit(
+            partial(query_phase, self.sim.plan, params=self.sim.params, grid_spec=self.grid_spec)
+        )(state)
+
+
+def uniform_population(
+    sim: Simulation,
+    n: int,
+    capacity: int,
+    seed: int = 0,
+    velocity_scale: float = 0.0,
+    extra: dict[str, Any] | None = None,
+) -> AgentState:
+    """Agents placed uniformly in the world box (convenience for tests)."""
+    rs = np.random.RandomState(seed)
+    lo, hi = sim.world_lo, sim.world_hi
+    xname, yname = sim.agent_class.position
+    arrays = {
+        xname: rs.uniform(lo[0], hi[0], n).astype(np.float32),
+        yname: rs.uniform(lo[1], hi[1], n).astype(np.float32),
+    }
+    if extra:
+        arrays.update({k: np.asarray(v) for k, v in extra.items()})
+    return sim.init_population(capacity, oid=np.arange(n), **arrays)

@@ -1,0 +1,181 @@
+"""Uniform-grid spatial index — the TPU-native replacement for the KD-tree.
+
+The paper's prototype uses a per-node KD-tree (§5.1) to turn the query
+phase's neighbor enumeration into an orthogonal range query.  Pointer-based
+tree descent is data-dependent control flow, which TPUs execute poorly, so
+we use the classic cell-list structure instead: sort agents by cell id and
+materialize a dense ``[n_cells, capacity]`` table of slot indices.  A range
+query for visibility box ρ then becomes a gather over the 3×3 stencil of
+neighboring cells — fully vectorized, static shapes, same asymptotic win as
+the KD-tree (benchmarks/fig3, fig4).
+
+Design notes:
+  * cell sizes ≥ visibility bound per axis ⇒ the stencil covers every
+    agent's visible region;
+  * the grid *origin* is a dynamic argument (the distributed runtime slides
+    a local grid over its slab, whose bounds change under load balancing);
+  * out-of-extent agents clamp into border cells.  Clamping only moves
+    agents inward, so any pair within the visibility bound stays within
+    stencil adjacency — correctness is preserved, only border-cell density
+    (and hence the static ``capacity``) is affected.  Capacity overflow is
+    the one lossy event; it is counted and surfaced in engine stats;
+  * periodic axes (traffic's circular road) wrap the stencil.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Static grid geometry (origin is supplied dynamically)."""
+
+    nx: int
+    ny: int
+    sx: float  # cell extent per axis
+    sy: float
+    capacity: int  # max agents materialized per cell
+    periodic_x: bool = False
+    periodic_y: bool = False
+
+    @property
+    def n_cells(self) -> int:
+        return self.nx * self.ny
+
+
+def make_grid(
+    extent: tuple[float, float],
+    visibility: tuple[float, float],
+    n_agents: int,
+    capacity_factor: float = 3.0,
+    max_cells: int = 16384,
+    periodic: tuple[bool, bool] = (False, False),
+    cell_capacity: int | None = None,
+) -> GridSpec:
+    """Choose a grid: cells no smaller than the visibility box per axis.
+
+    ``cell_capacity`` overrides the automatic Poisson-ish sizing — needed
+    for simulations whose agents cluster far beyond uniform density (e.g. a
+    fish school collapsing into tight groups).  Overflow is always counted
+    at runtime, so under-provisioning is detected, never silent.
+    """
+    nx = max(1, int(extent[0] / max(visibility[0], 1e-9)))
+    ny = max(1, int(extent[1] / max(visibility[1], 1e-9)))
+    while nx * ny > max_cells:  # keep the table bounded
+        if nx >= ny:
+            nx = max(1, nx // 2)
+        else:
+            ny = max(1, ny // 2)
+    sx = extent[0] / nx
+    sy = extent[1] / ny
+    if cell_capacity is not None:
+        capacity = int(cell_capacity)
+    else:
+        mean = max(1.0, n_agents / (nx * ny))
+        # mean + Poisson tail + slack, scaled by the caller's factor
+        capacity = int(math.ceil((mean + 3.0 * math.sqrt(mean) + 4.0) * capacity_factor / 3.0))
+        capacity = max(16, capacity)
+        capacity = min(capacity, max(16, n_agents))
+    return GridSpec(
+        nx=nx, ny=ny, sx=sx, sy=sy, capacity=capacity,
+        periodic_x=periodic[0], periodic_y=periodic[1],
+    )
+
+
+def _coords(gs: GridSpec, lo, x: Array, y: Array) -> tuple[Array, Array]:
+    cx = jnp.clip(jnp.floor((x - lo[0]) / gs.sx).astype(jnp.int32), 0, gs.nx - 1)
+    cy = jnp.clip(jnp.floor((y - lo[1]) / gs.sy).astype(jnp.int32), 0, gs.ny - 1)
+    return cx, cy
+
+
+def cell_id(gs: GridSpec, lo, x: Array, y: Array) -> Array:
+    cx, cy = _coords(gs, lo, x, y)
+    return cx * gs.ny + cy
+
+
+def build_table(gs: GridSpec, lo, x: Array, y: Array, alive: Array):
+    """Dense cell→slots table.
+
+    Returns ``(table [n_cells, capacity] int32, overflow int32)``; empty
+    entries are ``n`` (one past the last slot, caller masks).
+    """
+    n = x.shape[0]
+    cid = jnp.where(alive, cell_id(gs, lo, x, y), gs.n_cells)  # dead → ghost cell
+    order = jnp.argsort(cid, stable=True)
+    cid_sorted = cid[order]
+    # rank of each agent within its cell: position minus position of run start
+    pos = jnp.arange(n)
+    run_first = jnp.concatenate(
+        [jnp.ones((1,), bool), cid_sorted[1:] != cid_sorted[:-1]]
+    )
+    run_id = jnp.cumsum(run_first.astype(jnp.int32)) - 1  # 0-based run index
+    run_start = jax.ops.segment_min(pos, run_id, num_segments=n)
+    rank = pos - run_start[run_id]
+
+    valid = cid_sorted < gs.n_cells
+    in_cap = rank < gs.capacity
+    keep = valid & in_cap
+    overflow = jnp.sum((valid & ~in_cap).astype(jnp.int32))
+
+    table = jnp.full((gs.n_cells + 1, gs.capacity), n, jnp.int32)
+    safe_cid = jnp.where(keep, cid_sorted, gs.n_cells)
+    safe_rank = jnp.where(keep, rank, 0).astype(jnp.int32)
+    table = table.at[safe_cid, safe_rank].set(
+        jnp.where(keep, order.astype(jnp.int32), n)
+    )
+    return table[: gs.n_cells], overflow
+
+
+_STENCIL = np.array(
+    [(dx, dy) for dx in (-1, 0, 1) for dy in (-1, 0, 1)], dtype=np.int32
+)
+
+
+def candidates(gs: GridSpec, lo, table: Array, x: Array, y: Array):
+    """Per-agent candidate slot indices from the 3×3 stencil.
+
+    Returns ``(idx [N, 9*capacity], valid [N, 9*capacity])``; ``idx`` holds
+    ``n`` where invalid.
+    """
+    n = x.shape[0]
+    cx, cy = _coords(gs, lo, x, y)
+
+    st = jnp.asarray(_STENCIL)  # [9, 2]
+    ncx = cx[:, None] + st[None, :, 0]  # [N, 9]
+    ncy = cy[:, None] + st[None, :, 1]
+    if gs.periodic_x:
+        ncx = jnp.mod(ncx, gs.nx)
+        okx = jnp.ones_like(ncx, dtype=bool)
+    else:
+        okx = (ncx >= 0) & (ncx < gs.nx)
+        ncx = jnp.clip(ncx, 0, gs.nx - 1)
+    if gs.periodic_y:
+        ncy = jnp.mod(ncy, gs.ny)
+        oky = jnp.ones_like(ncy, dtype=bool)
+    else:
+        oky = (ncy >= 0) & (ncy < gs.ny)
+        ncy = jnp.clip(ncy, 0, gs.ny - 1)
+    in_grid = okx & oky
+    ncell = ncx * gs.ny + ncy
+
+    cand = table[ncell]  # [N, 9, capacity]
+    cand = jnp.where(in_grid[:, :, None], cand, n)
+    cand = cand.reshape(n, -1)
+    valid = cand < n
+    return cand, valid
+
+
+def brute_candidates(n: int) -> tuple[Array, Array]:
+    """No-index fallback: every agent is a candidate of every agent (Fig. 3's
+    quadratic baseline)."""
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (n, n))
+    valid = jnp.ones((n, n), bool)
+    return idx, valid

@@ -1,0 +1,167 @@
+"""The spatial self-join driving the query phase (paper §3.1).
+
+Each tick's query phase joins every agent with the agents in its visible
+region and aggregates effect assignments with the field combinators.  The
+join is expressed over a *candidate table* — either the grid index stencil
+(``grid.candidates``) or the quadratic no-index fallback — plus a
+visibility predicate evaluated per candidate pair.
+
+Emissions come from the compiled BRASIL program as a ``pair_fn``:
+
+    pair_fn(self_env, other_env, params) ->
+        [(target, effect_name, value, cond_mask), ...]
+
+with ``self_env[field] : [N, 1, ...]`` and ``other_env[field] : [N, K, ...]``.
+``target == "self"`` contributions are ⊕-reduced over K (local effects);
+``target == "other"`` contributions are ⊕-scattered into the candidate's
+effect slot (non-local effects — the map-reduce-reduce path, paper §3.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import combinators as combs
+from .agents import AgentState, EffectSpec
+
+Array = jax.Array
+
+
+def wrapped_delta(d: Array, period: float) -> Array:
+    """Shortest signed delta on a circle of the given period."""
+    return d - period * jnp.round(d / period)
+
+
+@dataclasses.dataclass(frozen=True)
+class Visibility:
+    """Per-axis rectangular visibility bound (the paper's #range boxes),
+    optionally intersected with an L2 ball of radius ``radius``.  Periodic
+    axes (e.g. a circular road) wrap the distance."""
+
+    pos_fields: tuple[str, str]
+    bounds: tuple[float, float]  # half-extent per axis (linf box)
+    radius: float | None = None  # optional euclidean bound (<= box)
+    periods: tuple[float | None, float | None] = (None, None)
+
+    def deltas(self, self_env: dict, other_env: dict) -> tuple[Array, Array]:
+        dx = other_env[self.pos_fields[0]] - self_env[self.pos_fields[0]]
+        dy = other_env[self.pos_fields[1]] - self_env[self.pos_fields[1]]
+        if self.periods[0] is not None:
+            dx = wrapped_delta(dx, self.periods[0])
+        if self.periods[1] is not None:
+            dy = wrapped_delta(dy, self.periods[1])
+        return dx, dy
+
+    def mask(self, self_env: dict, other_env: dict) -> Array:
+        dx, dy = self.deltas(self_env, other_env)
+        m = (jnp.abs(dx) <= self.bounds[0]) & (jnp.abs(dy) <= self.bounds[1])
+        if self.radius is not None:
+            m = m & (dx * dx + dy * dy <= self.radius**2)
+        return m
+
+
+def _env_self(fields: dict[str, Array]) -> dict[str, Array]:
+    return {k: v[:, None] for k, v in fields.items()}
+
+
+def _env_other(fields: dict[str, Array], idx: Array) -> dict[str, Array]:
+    # idx may contain n (one past the end) for invalid candidates → clip and
+    # rely on the validity mask.
+    n = next(iter(fields.values())).shape[0]
+    safe = jnp.minimum(idx, n - 1)
+    return {k: v[safe] for k, v in fields.items()}
+
+
+def identity_effects(
+    effect_specs: list[EffectSpec], n: int
+) -> dict[str, Any]:
+    """θ — effects reset at the start of every query phase (paper App. A)."""
+    out: dict[str, Any] = {}
+    for es in effect_specs:
+        comb = combs.get(es.comb)
+        if isinstance(comb, combs.ArgOptCombinator):
+            payload_specs = {p[0]: (tuple(p[1]), p[2]) for p in es.payload}
+            single = comb.identity(payload_specs)
+            out[es.name] = {
+                k: jnp.broadcast_to(v, (n,) + v.shape).astype(v.dtype)
+                for k, v in single.items()
+            }
+        else:
+            out[es.name] = comb.identity((n,) + tuple(es.shape), es.dtype)
+    return out
+
+
+def run_query(
+    state: AgentState,
+    cand_idx: Array,
+    cand_valid: Array,
+    pair_fn: Callable,
+    effect_specs: list[EffectSpec],
+    visibility: Visibility,
+    params: dict,
+    include_self_pair: bool = False,
+    self_mask: Array | None = None,
+) -> dict[str, Any]:
+    """Execute the query phase: returns the per-agent effect values.
+
+    Dead agents neither emit nor receive; an agent is not its own neighbor
+    unless ``include_self_pair``.  ``self_mask`` restricts which rows
+    *execute* their query (emit) — the distributed runtime passes the
+    ownership mask so halo replicas participate only as join candidates,
+    exactly the paper's "reducer processes the query phase of its owned
+    set" (§3.2); without it, owner and replica would both evaluate the same
+    pair and non-local effects would be double-counted.
+    """
+    n = state.capacity
+    spec_by_name = {es.name: es for es in effect_specs}
+    effects = identity_effects(effect_specs, n)
+
+    self_env = _env_self(state.fields)
+    other_env = _env_other(state.fields, cand_idx)
+
+    alive_self = state.alive[:, None]
+    if self_mask is not None:
+        alive_self = alive_self & self_mask[:, None]
+    alive_other = state.alive[jnp.minimum(cand_idx, n - 1)] & cand_valid
+    pair_mask = alive_self & alive_other & visibility.mask(self_env, other_env)
+    if not include_self_pair:
+        pair_mask = pair_mask & (cand_idx != jnp.arange(n, dtype=cand_idx.dtype)[:, None])
+
+    emissions = pair_fn(self_env, other_env, params)
+    for target, name, value, cond in emissions:
+        es = spec_by_name[name]
+        comb = combs.get(es.comb)
+        m = pair_mask if cond is None else (pair_mask & cond)
+        if target == "self":
+            if isinstance(comb, combs.ArgOptCombinator):
+                red = comb.reduce(value, m, axis=1)
+                effects[name] = comb.combine(effects[name], red)
+            else:
+                red = comb.reduce(value, m, axis=1)
+                effects[name] = comb.combine(effects[name], red)
+        elif target == "other":
+            if isinstance(comb, combs.ArgOptCombinator):
+                raise NotImplementedError(
+                    f"non-local {es.comb} effects unsupported; invert the effect"
+                )
+            effects[name] = comb.scatter(effects[name], cand_idx, value, m)
+        else:  # pragma: no cover
+            raise ValueError(f"bad emission target {target!r}")
+    return effects
+
+
+def combine_effects(
+    effect_specs: list[EffectSpec],
+    a: dict[str, Any],
+    b: dict[str, Any],
+) -> dict[str, Any]:
+    """⊕-merge two partial effect maps (reduce₂ of map-reduce-reduce)."""
+    out = {}
+    for es in effect_specs:
+        comb = combs.get(es.comb)
+        out[es.name] = comb.combine(a[es.name], b[es.name])
+    return out

@@ -1,0 +1,127 @@
+"""1-D load balancer (paper §3.3 / §5.1).
+
+The paper's prototype: "A one-dimensional load balancer periodically
+receives statistics from the slave nodes, including computational load and
+number of owned agents; from these it heuristically computes a new
+partition trying to balance improved performance against estimated
+migration cost."  This is that balancer.
+
+Cost model per slab: ``cost = agents + pair_weight · agents²/width`` (the
+query phase is quadratic in local density; pair_weight is measured or left
+at a default).  New boundaries invert the piecewise-linear cost CDF, i.e.
+equal-cost slabs assuming uniform density within each old slab — the same
+granularity of information the paper's master receives (per-slab stats,
+not per-agent positions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BalanceDecision:
+    rebalance: bool
+    new_bounds: np.ndarray
+    imbalance: float          # max/mean cost before
+    predicted_imbalance: float
+    migration_fraction: float  # estimated fraction of agents changing slab
+
+
+def slab_costs(counts: np.ndarray, widths: np.ndarray, pair_weight: float = 0.0):
+    counts = np.maximum(counts.astype(np.float64), 0.0)
+    base = counts.copy()
+    if pair_weight > 0:
+        dens = counts / np.maximum(widths, 1e-12)
+        base = base + pair_weight * counts * dens
+    return base
+
+
+def equal_cost_bounds(
+    bounds: np.ndarray, costs: np.ndarray, min_width: float
+) -> np.ndarray:
+    """Invert the piecewise-linear cost CDF to equal-cost boundaries."""
+    p = len(costs)
+    total = float(costs.sum())
+    if total <= 0:
+        return bounds.copy()
+    edges = np.asarray(bounds, np.float64)
+    cdf = np.concatenate([[0.0], np.cumsum(costs)])
+    targets = np.linspace(0.0, total, p + 1)
+    new = np.interp(targets, cdf, edges)
+    new[0], new[-1] = edges[0], edges[-1]
+    # enforce a minimum slab width (halo/migration one-hop soundness)
+    for i in range(1, p):
+        new[i] = max(new[i], new[i - 1] + min_width)
+    for i in range(p - 1, 0, -1):
+        new[i] = min(new[i], new[i + 1] - min_width)
+    return new
+
+
+def estimate_migration(
+    bounds: np.ndarray, new_bounds: np.ndarray, counts: np.ndarray
+) -> float:
+    """Fraction of agents changing slab, assuming uniform density per slab."""
+    total = float(counts.sum())
+    if total <= 0:
+        return 0.0
+    moved = 0.0
+    widths = np.diff(bounds)
+    for i in range(len(counts)):
+        lo, hi = bounds[i], bounds[i + 1]
+        nlo, nhi = new_bounds[i], new_bounds[i + 1]
+        stay = max(0.0, min(hi, nhi) - max(lo, nlo))
+        frac_stay = stay / max(widths[i], 1e-12)
+        moved += counts[i] * (1.0 - min(1.0, frac_stay))
+    return moved / total
+
+
+def decide(
+    bounds: np.ndarray,
+    counts: np.ndarray,
+    min_width: float,
+    pair_weight: float = 0.0,
+    imbalance_threshold: float = 1.25,
+    migration_weight: float = 0.5,
+) -> BalanceDecision:
+    """Cost/benefit heuristic: rebalance when the imbalance reduction
+    outweighs the migration cost (paper: "balancing improved performance
+    against estimated migration cost")."""
+    bounds = np.asarray(bounds, np.float64)
+    counts = np.asarray(counts, np.float64)
+    widths = np.diff(bounds)
+    costs = slab_costs(counts, widths, pair_weight)
+    mean = costs.mean() if costs.size else 0.0
+    imbalance = float(costs.max() / mean) if mean > 0 else 1.0
+
+    new_bounds = equal_cost_bounds(bounds, costs, min_width)
+    mig = estimate_migration(bounds, new_bounds, counts)
+
+    # predicted post-balance imbalance (re-bin costs onto new bounds)
+    pred_costs = _rebin(bounds, costs, new_bounds)
+    pmean = pred_costs.mean() if pred_costs.size else 0.0
+    predicted = float(pred_costs.max() / pmean) if pmean > 0 else 1.0
+
+    benefit = imbalance - predicted
+    go = imbalance > imbalance_threshold and benefit > migration_weight * mig
+    return BalanceDecision(
+        rebalance=bool(go),
+        new_bounds=new_bounds,
+        imbalance=imbalance,
+        predicted_imbalance=predicted,
+        migration_fraction=float(mig),
+    )
+
+
+def _rebin(bounds, costs, new_bounds):
+    dens = costs / np.maximum(np.diff(bounds), 1e-12)
+    out = np.zeros(len(costs))
+    for j in range(len(costs)):
+        nlo, nhi = new_bounds[j], new_bounds[j + 1]
+        for i in range(len(costs)):
+            lo, hi = bounds[i], bounds[i + 1]
+            overlap = max(0.0, min(hi, nhi) - max(lo, nlo))
+            out[j] += dens[i] * overlap
+    return out

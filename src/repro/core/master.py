@@ -1,0 +1,191 @@
+"""The BRACE master (paper §3.3, Fig. 1).
+
+Coordinates the cluster at *epoch* granularity: runs jitted epochs on the
+workers (one shard_map call each), collects per-slab statistics, triggers
+coordinated checkpoints, decides on repartitioning, and handles restart.
+
+Fault-tolerance model (matching the paper + production practice):
+  * coordinated checkpoint every ``checkpoint_every`` epochs (async write);
+  * on failure, re-execute every epoch since the last checkpoint — the
+    restore path is mesh-agnostic, so recovery may resume on a *different*
+    device count (elastic shrink after a node loss, or grow);
+  * stragglers: within an epoch the SPMD collectives are synchronous, so
+    persistent skew — the dominant straggler source in spatial sims — is
+    removed by the load balancer; transient node failure degenerates to the
+    checkpoint/restart path.  (Speculative re-execution of individual map
+    tasks does not apply: an epoch is one fused device program.)
+
+Host-side ``epoch_hooks`` run on the gathered global population between
+epochs (e.g. the predator simulation's spawn step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from . import loadbalance
+from .agents import AgentState
+from .checkpoint import CheckpointManager
+from .distribute import DistEngine
+from .engine import Simulation
+
+
+@dataclasses.dataclass
+class MasterConfig:
+    ticks_per_epoch: int = 32
+    checkpoint_every: int = 4          # epochs; 0 = off
+    checkpoint_dir: str | None = None
+    load_balance: bool = True
+    lb_imbalance_threshold: float = 1.25
+    lb_pair_weight: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class EpochReport:
+    epoch: int
+    tick: int
+    alive: np.ndarray          # [P] at epoch end
+    imbalance: float
+    rebalanced: bool
+    stats: dict[str, np.ndarray]
+
+
+class Master:
+    def __init__(
+        self,
+        engine: DistEngine,
+        config: MasterConfig,
+        epoch_hooks: list[Callable[[AgentState, int], AgentState]] | None = None,
+    ):
+        self.engine = engine
+        self.config = config
+        self.epoch_hooks = list(epoch_hooks or [])
+        self.ckpt = (
+            CheckpointManager(config.checkpoint_dir)
+            if config.checkpoint_dir
+            else None
+        )
+        self.bounds = engine.uniform_bounds()
+        self.tick = 0
+        self.epoch = 0
+        vis_x = engine.sim.plan.visibility.bounds[0]
+        reach_x = engine.sim.plan.reach[0]
+        # one-hop halo/migration soundness: slabs no narrower than the
+        # visibility bound (and the per-tick reach).  Slabs wider than the
+        # static local grid extent merely clamp into border cells (see
+        # grid.py) — wide slabs are produced by the balancer only where the
+        # population is sparse, so that is benign.
+        self.min_width = max(vis_x, reach_x if np.isfinite(reach_x) else vis_x)
+
+    # -- lifecycle -------------------------------------------------------------
+    def start(self, global_state: AgentState) -> AgentState:
+        """Place the initial population; returns the sharded state."""
+        return self.engine.distribute(global_state, self.bounds)
+
+    def restore_from_checkpoint(self, step: int | None = None) -> AgentState:
+        """Elastic restore: works for any current device count."""
+        assert self.ckpt is not None, "no checkpoint_dir configured"
+        global_state, meta = self.ckpt.restore(step)
+        self.tick = int(meta["tick"])
+        self.epoch = int(meta["epoch"])
+        saved_bounds = np.asarray(meta["bounds"])
+        if len(saved_bounds) - 1 == self.engine.n_parts:
+            self.bounds = saved_bounds
+        else:  # different mesh size: restart from uniform slabs
+            self.bounds = self.engine.uniform_bounds()
+        return self.engine.distribute(global_state, self.bounds)
+
+    # -- the master loop ---------------------------------------------------------
+    def run_epoch(self, state: AgentState) -> tuple[AgentState, EpochReport]:
+        cfg = self.config
+        state, stats = self.engine.run_epoch(
+            state,
+            self.bounds,
+            n_ticks=cfg.ticks_per_epoch,
+            seed=cfg.seed,
+            t0=self.tick,
+        )
+        self.tick += cfg.ticks_per_epoch
+        self.epoch += 1
+
+        for key in ("mig_overflow", "halo_overflow", "grid_overflow"):
+            if key in stats and int(np.asarray(stats[key]).sum()) > 0:
+                raise RuntimeError(
+                    f"{key}={int(np.asarray(stats[key]).sum())}: capacity "
+                    "under-provisioned — raise capacity_factor/halo_fraction"
+                )
+
+        alive = np.asarray(stats["alive"])[:, -1]  # [P]
+
+        # ---- host-side hooks (e.g. spawning) --------------------------------
+        if self.epoch_hooks:
+            g = self.engine.gather(state)
+            for hook in self.epoch_hooks:
+                g = hook(g, self.tick)
+            state = self.engine.distribute(g, self.bounds)
+            alive = self._alive_per_slab(g)
+
+        # ---- load balancing ---------------------------------------------------
+        rebalanced = False
+        decision = loadbalance.decide(
+            self.bounds,
+            alive,
+            self.min_width,
+            pair_weight=cfg.lb_pair_weight,
+            imbalance_threshold=cfg.lb_imbalance_threshold,
+        )
+        if cfg.load_balance and decision.rebalance:
+            g = self.engine.gather(state)
+            self.bounds = decision.new_bounds
+            state = self.engine.distribute(g, self.bounds)
+            rebalanced = True
+
+        # ---- coordinated checkpoint -------------------------------------------
+        if self.ckpt and cfg.checkpoint_every and self.epoch % cfg.checkpoint_every == 0:
+            g = self.engine.gather(state)
+            self.ckpt.save(
+                self.tick,
+                g,
+                meta={
+                    "tick": self.tick,
+                    "epoch": self.epoch,
+                    "bounds": [float(b) for b in self.bounds],
+                    "seed": cfg.seed,
+                    "n_parts": self.engine.n_parts,
+                },
+            )
+
+        report = EpochReport(
+            epoch=self.epoch,
+            tick=self.tick,
+            alive=alive,
+            imbalance=decision.imbalance,
+            rebalanced=rebalanced,
+            stats=stats,
+        )
+        return state, report
+
+    def run(self, state: AgentState, n_epochs: int) -> tuple[AgentState, list[EpochReport]]:
+        reports = []
+        for _ in range(n_epochs):
+            state, rep = self.run_epoch(state)
+            reports.append(rep)
+        if self.ckpt:
+            self.ckpt.wait()
+        return state, reports
+
+    # -- helpers ---------------------------------------------------------------
+    def _alive_per_slab(self, g: AgentState) -> np.ndarray:
+        xf = self.engine.sim.plan.visibility.pos_fields[0]
+        x = np.asarray(g.fields[xf])
+        alive = np.asarray(g.alive)
+        out = np.zeros(self.engine.n_parts)
+        for p in range(self.engine.n_parts):
+            lo = -np.inf if p == 0 else self.bounds[p]
+            hi = np.inf if p == self.engine.n_parts - 1 else self.bounds[p + 1]
+            out[p] = np.sum(alive & (x >= lo) & (x < hi))
+        return out

@@ -1,0 +1,108 @@
+"""The state-effect tick: query phase + update phase (paper §2.1).
+
+``make_tick`` assembles a jit-able function advancing a population one tick
+on a single partition.  The distributed runtime re-uses the same query and
+update phases, inserting halo exchange / effect return between them
+(``core/distribute.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import grid as gridlib
+from .agents import AgentState, EffectSpec
+from .join import Visibility, run_query
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TickPlan:
+    """Everything the runtime needs to execute one agent class's tick.
+
+    Produced by the BRASIL compiler (brasil/compiler.py).
+    """
+
+    effect_specs: list[EffectSpec]
+    pair_fn: Callable  # (self_env, other_env, params) -> emissions
+    update_fn: Callable  # (fields, effects, params, rng, t) -> (fields, alive)
+    visibility: Visibility
+    reach: tuple[float, float]  # per-axis reachability bound
+    has_nonlocal: bool  # any target=="other" emission remains
+
+
+def query_phase(
+    plan: TickPlan,
+    state: AgentState,
+    params: dict,
+    grid_spec: gridlib.GridSpec | None,
+    grid_lo: tuple | None = None,
+    self_mask: Array | None = None,
+) -> dict[str, Any]:
+    """Spatial join + effect aggregation.  ``grid_spec=None`` = no index.
+
+    ``grid_lo`` is the (possibly dynamic) grid origin; defaults to (0, 0).
+    """
+    x = state.fields[plan.visibility.pos_fields[0]]
+    y = state.fields[plan.visibility.pos_fields[1]]
+    if grid_spec is None:
+        cand, valid = gridlib.brute_candidates(state.capacity)
+    else:
+        lo = (0.0, 0.0) if grid_lo is None else grid_lo
+        table, _overflow = gridlib.build_table(grid_spec, lo, x, y, state.alive)
+        cand, valid = gridlib.candidates(grid_spec, lo, table, x, y)
+    return run_query(
+        state,
+        cand,
+        valid,
+        plan.pair_fn,
+        plan.effect_specs,
+        plan.visibility,
+        params,
+        self_mask=self_mask,
+    )
+
+
+def update_phase(
+    plan: TickPlan,
+    state: AgentState,
+    effects: dict[str, Any],
+    params: dict,
+    rng: Array,
+    t: Array,
+) -> AgentState:
+    """Per-agent update rules; may kill agents (alive ← False)."""
+    new_fields, new_alive = plan.update_fn(
+        state.fields, effects, params, rng, t, oid=state.oid
+    )
+    # dead agents keep their old fields, frozen
+    alive = state.alive & new_alive
+    fields = {
+        k: jnp.where(
+            jnp.reshape(state.alive, state.alive.shape + (1,) * (v.ndim - 1)),
+            v,
+            state.fields[k],
+        )
+        for k, v in new_fields.items()
+    }
+    return AgentState(alive=alive, oid=state.oid, fields=fields)
+
+
+def make_tick(
+    plan: TickPlan,
+    params: dict,
+    grid_spec: gridlib.GridSpec | None,
+    grid_lo: tuple | None = None,
+) -> Callable[[AgentState, Array, Array], AgentState]:
+    """Single-partition tick: query then update."""
+
+    def tick(state: AgentState, rng: Array, t: Array) -> AgentState:
+        effects = query_phase(plan, state, params, grid_spec, grid_lo)
+        return update_phase(plan, state, effects, params, rng, t)
+
+    return tick

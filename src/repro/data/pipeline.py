@@ -1,0 +1,108 @@
+"""Synthetic sharded token pipeline.
+
+Deterministic per (seed, step, shard): every data-parallel host draws a
+disjoint, reproducible slice of the global batch, so a restarted run
+(fault-tolerance path) replays the same stream.  Double-buffered prefetch
+overlaps host generation with device steps.
+
+The generator is a mixture of Zipf-distributed unigrams and short repeated
+motifs — enough structure that the CE loss falls measurably within a few
+hundred steps (examples/train_lm.py), while remaining dependency-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    motif_len: int = 8
+    motif_prob: float = 0.5
+
+
+class SyntheticTokens:
+    """Iterable over {tokens, labels} host batches (numpy)."""
+
+    def __init__(self, cfg: DataConfig, shard: int = 0, n_shards: int = 1,
+                 prefetch: int = 2):
+        if cfg.global_batch % n_shards:
+            raise ValueError("global_batch must divide by n_shards")
+        self.cfg = cfg
+        self.shard = shard
+        self.n_shards = n_shards
+        self.local_batch = cfg.global_batch // n_shards
+        self._motifs = self._make_motifs()
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = 0
+        self._thread: threading.Thread | None = None
+
+    def _make_motifs(self):
+        rs = np.random.RandomState(self.cfg.seed + 7)
+        return rs.randint(
+            0, self.cfg.vocab, size=(64, self.cfg.motif_len)
+        ).astype(np.int32)
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        rs = np.random.RandomState(
+            (cfg.seed * 1_000_003 + step) % (2**31) + self.shard
+        )
+        b, s = self.local_batch, cfg.seq_len
+        # Zipf unigrams (clipped into vocab)
+        toks = rs.zipf(cfg.zipf_a, size=(b, s + 1)).astype(np.int64)
+        toks = np.minimum(toks - 1, cfg.vocab - 1).astype(np.int32)
+        # overwrite random spans with repeated motifs (learnable structure)
+        n_spans = int(s * cfg.motif_prob / cfg.motif_len)
+        for i in range(b):
+            for _ in range(max(1, n_spans)):
+                m = self._motifs[rs.randint(0, len(self._motifs))]
+                start = rs.randint(0, s + 1 - cfg.motif_len)
+                toks[i, start:start + cfg.motif_len] = m
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    # -- background prefetch ---------------------------------------------------
+    def start(self):
+        def worker():
+            step = self._step
+            while True:
+                self._q.put(self.batch_at(step))
+                step += 1
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+        return self
+
+    def __next__(self):
+        if self._thread is None:
+            out = self.batch_at(self._step)
+        else:
+            out = self._q.get()
+        self._step += 1
+        return out
+
+    def __iter__(self):
+        return self
+
+
+def make_batch_specs(vocab: int, seq_len: int, global_batch: int):
+    """ShapeDtypeStructs for a training batch (dry-run input stand-ins)."""
+    import jax.numpy as jnp
+
+    shape = (global_batch, seq_len)
+    return {
+        "tokens": jax.ShapeDtypeStruct(shape, jnp.int32),
+        "labels": jax.ShapeDtypeStruct(shape, jnp.int32),
+    }

@@ -1,0 +1,126 @@
+"""Flash attention forward as a Pallas TPU kernel.
+
+Canonical TPU tiling: grid = (batch·heads, q_tiles, kv_tiles) with the
+kv dimension LAST (sequential on TPU), so the VMEM scratch (running max,
+denominator, f32 accumulator) carries across kv steps while BlockSpecs
+pipeline the HBM→VMEM tile copies.  Causal and sliding-window masks are
+applied per tile; tiles entirely outside the mask are skipped with
+``pl.when`` (zero MXU work — the sequence-axis neighborhood property).
+
+Block shapes default to (128, 128): MXU-aligned (multiples of 128 on both
+matmul dims), and the working set per step —
+q(128×D) + k(128×D) + v(128×D) + acc(128×D f32) + scores(128×128 f32) —
+stays well under VMEM for D ≤ 256.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, bq: int, bk: int, causal: bool, window: int | None,
+            scale: float, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = qi * bq
+    k0 = ki * bk
+    # static-ish tile relevance test (depends only on program ids)
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant = relevant & (k0 <= q0 + bq - 1)
+    if window is not None:
+        relevant = relevant & (k0 + bk - 1 >= q0 - window + 1)
+
+    @pl.when(relevant)
+    def _step():
+        q = q_ref[0]  # [bq, D]
+        k = k_ref[0]  # [bk, D]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [bq, bk]
+        qp = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= qp >= kp
+        if window is not None:
+            mask &= qp - kp < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q/k/v: [B, H, S, D] → [B, H, S, D]."""
+    b, h, s, d = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    if s % bq or s % bk:
+        raise ValueError(f"S={s} must be a multiple of block sizes {bq},{bk}")
+    nq, nk = s // bq, s // bk
+    bh = b * h
+    qr = q.reshape(bh, s, d)
+    kr = k.reshape(bh, s, d)
+    vr = v.reshape(bh, s, d)
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, causal=causal, window=window,
+        scale=d**-0.5, nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, qi, ki: (g, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, qi, ki: (g, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, qi, ki: (g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, qi, ki: (g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),   # f32 output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)

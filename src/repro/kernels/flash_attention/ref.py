@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: naive masked attention (causal / sliding window)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q/k/v: [B, H, S, D] → [B, H, S, D] (f32 math)."""
+    b, h, s, d = q.shape
+    sc = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * d**-0.5
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Jitted wrapper for the RWKV6 wkv kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import wkv_ref
+from .rwkv6 import wkv_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    return wkv_pallas(r, k, v, logw, u, chunk=chunk, interpret=interpret)
+
+
+def wkv_reference(r, k, v, logw, u, s0=None):
+    import jax.numpy as jnp
+
+    b, h, t, kd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+    out, _ = wkv_ref(r, k, v, logw, u, s0)
+    return out

@@ -1,0 +1,24 @@
+"""Pure-jnp sequential oracle for the RWKV6 wkv recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u, s0):
+    """r/k/v/logw: [B, H, T, K] f32; u: [H, K]; s0: [B, H, K, V].
+
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    Returns (out [B, H, T, K], s_final).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B, H, K]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = jnp.exp(wt)[..., None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, logw))
+    s_fin, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 2), s_fin

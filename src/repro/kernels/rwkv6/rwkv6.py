@@ -1,0 +1,107 @@
+"""RWKV6 wkv recurrence as a Pallas TPU kernel (chunked parallel form).
+
+Grid = (batch·heads, chunks) with chunks sequential; the carried state
+S ∈ R^{K×V} lives in VMEM scratch.  Within a chunk the decay-weighted
+lower-triangular interaction matrix is formed on the MXU (the SSD trick
+applied to RWKV6's data-dependent per-channel decay):
+
+    A[t, m] = Σ_k r[t,k] · exp(cum[t,k] − w[t,k] − cum[m,k]) · k[m,k]   (m < t)
+    out     = A·V + (r·exp(cum_excl))·S_in + diag(r·u·k)·V
+    S_out   = exp(cum_L) ⊙ S_in + Σ_m (exp(cum_L − cum_m) k_m) v_mᵀ
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)     # [C, K]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)     # log-decay ≤ 0
+    u = u_ref[0].astype(jnp.float32)     # [1, K] (head bonus row)
+
+    cum = jnp.cumsum(w, axis=0)          # [C, K]
+    cum_excl = cum - w
+    s_in = s_scr[...]                    # [K, V]
+
+    # inter-chunk: out_inter = (r ⊙ exp(cum_excl)) @ S_in
+    rd = r * jnp.exp(cum_excl)
+    out_inter = jax.lax.dot_general(
+        rd, s_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # intra-chunk lower-triangular attention-like term
+    att = jax.lax.dot_general(
+        rd, k * jnp.exp(-cum), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [C, C]  att[t, m]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(ti > mi, att, 0.0)
+    out_intra = jax.lax.dot_general(
+        att, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # diagonal bonus
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)  # [C, 1]
+    out_diag = diag * v
+
+    o_ref[0] = (out_inter + out_intra + out_diag).astype(o_ref.dtype)
+
+    # state update
+    total = cum[-1:, :]                  # [1, K]
+    kd = k * jnp.exp(total - cum)        # [C, K]
+    s_new = jnp.exp(total).T * s_in + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_scr[...] = s_new
+
+
+def wkv_pallas(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/logw: [B, H, T, K]; u: [H, K] → out [B, H, T, K].
+
+    (Initial state is zero; the final state can be recovered with one extra
+    chunk pass if needed — decode uses the jnp path.)
+    """
+    b, h, t, kd = r.shape
+    chunk = min(chunk, t)
+    if t % chunk:
+        raise ValueError(f"T={t} must be a multiple of chunk={chunk}")
+    nc = t // chunk
+    bh = b * h
+
+    def flat(a):
+        return a.reshape(bh, t, kd)
+
+    u_full = jnp.broadcast_to(u[None], (b, h, kd)).reshape(bh, 1, kd)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, kd), lambda g, ci: (g, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda g, ci: (g, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda g, ci: (g, ci, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda g, ci: (g, ci, 0)),
+            pl.BlockSpec((1, 1, kd), lambda g, ci: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, kd), lambda g, ci: (g, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, kd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((kd, kd), jnp.float32)],
+        interpret=interpret,
+    )(flat(r), flat(k), flat(v), flat(logw), u_full)
+    return out.reshape(b, h, t, kd)

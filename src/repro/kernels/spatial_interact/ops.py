@@ -1,0 +1,49 @@
+"""Jitted wrapper: pads to tile multiples, computes a sound index band
+from the visibility radius, sorts by x, runs the kernel, unsorts."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ref import N_CHANNELS, spatial_interact_ref
+from .spatial_interact import DEF_TK, DEF_TQ, spatial_interact_pallas
+
+
+@partial(jax.jit, static_argnames=("alpha", "rho", "band", "interpret", "tq", "tk"))
+def spatial_interact(
+    x, y, hx, hy, alive,
+    *,
+    alpha: float,
+    rho: float,
+    band: int | None = None,
+    tq: int = DEF_TQ,
+    tk: int = DEF_TK,
+    interpret: bool = False,
+):
+    """Sorted-banded spatial interaction; returns [N, 8] in input order."""
+    n = x.shape[0]
+    tq = min(tq, max(8, n))
+    tk = min(tk, max(8, n))
+    pad = (-n) % max(tq, tk)
+    if pad:
+        z = jnp.zeros((pad,), x.dtype)
+        x = jnp.concatenate([x, z])
+        y = jnp.concatenate([y, z])
+        hx = jnp.concatenate([hx, z])
+        hy = jnp.concatenate([hy, z])
+        alive = jnp.concatenate([alive, jnp.zeros((pad,), alive.dtype)])
+
+    order = jnp.argsort(jnp.where(alive, x, 3e38))
+    inv = jnp.argsort(order)
+    out = spatial_interact_pallas(
+        x[order], y[order], hx[order], hy[order], alive[order],
+        alpha=alpha, rho=rho, band=band, tq=tq, tk=tk, interpret=interpret,
+    )
+    return out[inv][:n]
+
+
+def spatial_interact_reference(x, y, hx, hy, alive, *, alpha, rho):
+    return spatial_interact_ref(x, y, hx, hy, alive, alpha, rho)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the spatial interaction kernel.
+
+Computes the Couzin-style zonal accumulators for every agent i over all
+agents j (the paper's query-phase hot loop):
+
+    dist < α   (repulsion zone):  rx += -dx/d, ry += -dy/d, cnt_r += 1
+    α ≤ dist < ρ (attract/orient): ax += dx/d, ay += dy/d,
+                                   ox += hx_j, oy += hy_j, cnt_a += 1
+
+Output channels: [rx, ry, ax, ay, ox, oy, cnt_r, cnt_a]  → [N, 8].
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+N_CHANNELS = 8
+
+
+def spatial_interact_ref(x, y, hx, hy, alive, alpha: float, rho: float):
+    eps = 1e-6
+    dx = x[None, :] - x[:, None]   # [i, j] = j relative to i
+    dy = y[None, :] - y[:, None]
+    d2 = dx * dx + dy * dy
+    d = jnp.sqrt(d2) + eps
+    pair = alive[:, None] & alive[None, :]
+    n = x.shape[0]
+    pair = pair & ~jnp.eye(n, dtype=bool)
+    vis = pair & (d2 <= rho * rho)
+    rep = vis & (d2 < alpha * alpha)
+    att = vis & ~rep
+
+    def acc(mask, val):
+        return jnp.sum(jnp.where(mask, val, 0.0), axis=1)
+
+    rx = acc(rep, -dx / d)
+    ry = acc(rep, -dy / d)
+    ax = acc(att, dx / d)
+    ay = acc(att, dy / d)
+    ox = acc(att, jnp.broadcast_to(hx[None, :], d.shape))
+    oy = acc(att, jnp.broadcast_to(hy[None, :], d.shape))
+    cr = acc(rep, jnp.ones_like(d))
+    ca = acc(att, jnp.ones_like(d))
+    return jnp.stack([rx, ry, ax, ay, ox, oy, cr, ca], axis=-1)

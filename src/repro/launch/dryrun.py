@@ -1,0 +1,56 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run entrypoint.
+
+The two lines above run before ANY other import (jax locks the device
+count on first init): 512 placeholder CPU devices back the production
+meshes.  Everything else lives in dryrun_lib (importable without the env
+side effect for small-mesh tests).
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all            # all 40 cells × both meshes
+    python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+
+def main(argv=None):
+    from repro.configs.base import SHAPES, all_archs
+    from repro.launch.dryrun_lib import run_cells
+    from repro.launch.mesh import make_production_mesh
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", action="append", help="architecture id(s)")
+    p.add_argument("--shape", action="append", help="shape name(s)")
+    p.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    p.add_argument("--all", action="store_true", help="all archs × shapes")
+    p.add_argument("--out", default="results/dryrun")
+    args = p.parse_args(argv)
+
+    archs = all_archs() if (args.all or not args.arch) else args.arch
+    shapes = list(SHAPES) if (args.all or not args.shape) else args.shape
+
+    meshes = {}
+    if args.mesh in ("single", "both"):
+        meshes["single"] = make_production_mesh(multi_pod=False)
+    if args.mesh in ("multi", "both"):
+        meshes["multi"] = make_production_mesh(multi_pod=True)
+
+    results = run_cells(archs, shapes, meshes, out_dir=args.out)
+    n_fail = sum(1 for r in results if not r.ok and not r.skipped)
+    n_ok = sum(1 for r in results if r.ok)
+    n_skip = sum(1 for r in results if r.skipped)
+    print(f"\n{n_ok} ok / {n_skip} documented skips / {n_fail} FAILURES")
+    summary = [r.as_dict() for r in results]
+    with open(f"{args.out}/summary_{args.mesh}.json", "w") as f:
+        json.dump(summary, f, indent=2)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,427 @@
+"""Dry-run machinery: lower + compile every (arch × shape × mesh) cell and
+extract memory/cost/roofline evidence.  Pure library — no jax device-count
+side effects; the ``repro.launch.dryrun`` entrypoint sets XLA_FLAGS first.
+
+For each cell we build the *step function the production launcher runs*
+(train_step / prefill / decode_step), attach explicit NamedShardings for
+every input, and ``jit(...).lower(...).compile()`` against
+ShapeDtypeStructs — no arrays are ever allocated.  ``memory_analysis()``
+proves the cell fits per-device HBM; ``cost_analysis()`` + the HLO
+collective parse feed EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec, get_arch, supports
+from ..dist import hlo_analysis
+from ..dist.activation_sharding import activation_sharding, default_roles
+from ..dist.sharding import MeshAxes, batch_pspec, param_pspec, tree_shardings
+from ..models.zoo import Model, build_model
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import TrainConfig, TrainState, init_train_state, make_train_step
+
+Array = jax.Array
+
+HBM_PER_DEVICE = 16 * 1024**3  # v5e: 16 GiB
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one cell (the deliverable's ``input_specs()``)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, s // cfg.enc_frames_divisor, cfg.d_model), dt
+            )
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, s // cfg.enc_frames_divisor, cfg.d_model), dt
+            )
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache shardings
+# ---------------------------------------------------------------------------
+
+def _cache_pspec_for(name: str, shape: tuple, mesh: Mesh, axes: MeshAxes) -> P:
+    """Decode-cache leaf rules (leading dim = layer stack, replicated).
+
+    KV caches [L, B, T, Hkv, Dh]: batch over batch axes when divisible;
+    otherwise the sequence axis carries the parallelism (context sharding —
+    flash-decoding split-KV, GSPMD inserts the softmax-stat all-reduce).
+    Recurrent states shard batch и heads/channels.
+    """
+    from ..dist.sharding import _guard  # shared divisibility guard
+
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    def batch_axes_for(dim):
+        got = _guard(mesh, shape[dim], axes.batch)
+        if got is None:
+            got = _guard(mesh, shape[dim], (axes.batch[-1],))
+        return got
+
+    if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+        b_dim, t_dim, h_dim = 1, 2, 3
+        b_ax = batch_axes_for(b_dim)
+        spec[b_dim] = b_ax
+        h_ax = _guard(mesh, shape[h_dim], axes.tensor)
+        if h_ax is not None:
+            spec[h_dim] = h_ax
+            if b_ax is None:
+                spec[t_dim] = _guard(mesh, shape[t_dim], ("data",))
+        else:
+            remaining = ("data", axes.tensor) if b_ax is None else (axes.tensor,)
+            spec[t_dim] = _guard(mesh, shape[t_dim], remaining)
+            if spec[t_dim] is None:
+                spec[t_dim] = _guard(mesh, shape[t_dim], (axes.tensor,))
+    elif name in ("ssm", "wkv"):  # [L, B, H, N, P]
+        spec[1] = batch_axes_for(1)
+        spec[2] = _guard(mesh, shape[2], axes.tensor)
+    elif name == "conv":  # [L, B, K, C]
+        spec[1] = batch_axes_for(1)
+        spec[3] = _guard(mesh, shape[3], axes.tensor)
+    elif name in ("shift_t", "shift_c"):  # [L, B, D]
+        spec[1] = batch_axes_for(1)
+        spec[2] = _guard(mesh, shape[2], axes.tensor)
+    return P(*spec)
+
+
+def cache_shardings(cache_struct: Any, mesh: Mesh, axes: MeshAxes) -> Any:
+    def one(path, leaf):
+        names = [
+            str(p.key) for p in path if isinstance(p, jax.tree_util.DictKey)
+        ]
+        return NamedSharding(
+            mesh, _cache_pspec_for(names[-1], leaf.shape, mesh, axes)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    skipped: bool = False
+    reason: str = ""
+    compile_s: float = 0.0
+    memory: dict | None = None
+    roofline: dict | None = None            # trip-count-corrected (see below)
+    roofline_raw: dict | None = None        # scanned-program cost_analysis
+    model_flops_per_device: float = 0.0
+    useful_ratio: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# scan-trip-count correction
+# ---------------------------------------------------------------------------
+# XLA's cost_analysis counts a while-loop body ONCE, so the layer scan
+# undercounts FLOPs/bytes/collectives by ~n_layers (verified on granite-8b:
+# reported FLOPs × 36 ≈ 6·N·D).  We therefore compile two *unrolled* small
+# variants (L_a, L_b layers, scan_layers=False) and extrapolate the costs
+# linearly in the layer count: cost(L) = const + slope·L.  Per-layer costs
+# are layer-independent by construction (identical shapes), and the const
+# term captures embed/head/loss — so the fit is exact up to the MoE-router
+# noise.  Memory analysis stays with the real scanned program (where scan
+# matters).
+
+def _analysis_points(cfg: ArchConfig) -> tuple[int, int]:
+    if cfg.family == "hybrid":
+        p = max(1, cfg.shared_attn_period)
+        return p, 2 * p  # one / two (period mamba + shared attn) units
+    return 2, 4
+
+
+def _unrolled_cfg(cfg: ArchConfig, n_layers: int) -> ArchConfig:
+    # microbatches=1: the µbatch scan is ALSO a while loop whose body XLA
+    # counts once; per-token costs are identical at mb=1, so the unrolled
+    # cost points stay comparable
+    kw = dict(n_layers=n_layers, scan_layers=False, train_microbatches=1)
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(compiled, n_dev: int) -> dict:
+    roof = hlo_analysis.analyze(compiled, n_dev)
+    return {
+        "flops": roof.flops_per_device,
+        "bytes": roof.bytes_per_device,
+        "coll": dict(roof.coll_breakdown),
+    }
+
+
+def _extrapolate(ca: dict, cb: dict, la: int, lb: int, l_full: float) -> dict:
+    def lin(a, b):
+        slope = (b - a) / (lb - la)
+        return max(0.0, a + slope * (l_full - la))
+
+    coll = {
+        k: lin(ca["coll"].get(k, 0), cb["coll"].get(k, 0)) for k in ca["coll"]
+    }
+    return {
+        "flops": lin(ca["flops"], cb["flops"]),
+        "bytes": lin(ca["bytes"], cb["bytes"]),
+        "coll": coll,
+    }
+
+
+def _lower_train(model: Model, cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                 axes: MeshAxes, extra_jit_kwargs: dict | None = None):
+    tc = TrainConfig(
+        optimizer=AdamWConfig(), microbatches=cfg.train_microbatches
+    )
+    state_struct = jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0), tc)
+    )
+    state_sh = TrainState(
+        params=tree_shardings(state_struct.params, mesh, axes),
+        opt={
+            "master": tree_shardings(state_struct.opt["master"], mesh, axes),
+            "m": tree_shardings(state_struct.opt["m"], mesh, axes),
+            "v": tree_shardings(state_struct.opt["v"], mesh, axes),
+            "step": NamedSharding(mesh, P()),
+        },
+        err=None,
+    )
+    batch_struct = input_specs(cfg, shape)
+    batch_sh = {
+        k: NamedSharding(
+            mesh, batch_pspec(mesh, axes, v.shape[0], len(v.shape))
+        )
+        for k, v in batch_struct.items()
+    }
+    metrics_sh = {
+        "grad_norm": NamedSharding(mesh, P()),
+        "lr": NamedSharding(mesh, P()),
+        "loss": NamedSharding(mesh, P()),
+    }
+    step = make_train_step(model, tc, mesh=mesh, batch_axes=axes.batch)
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+        **(extra_jit_kwargs or {}),
+    )
+    return jitted.lower(state_struct, batch_struct)
+
+
+def _lower_prefill(model: Model, cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                   axes: MeshAxes):
+    params_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    params_sh = tree_shardings(params_struct, mesh, axes)
+    specs = input_specs(cfg, shape)
+    b, s = shape.global_batch, shape.seq_len
+
+    if cfg.family == "encdec":
+        fn = lambda p, batch: model.prefill(p, batch, s)
+        batch_struct = {"tokens": specs["tokens"], "frames": specs["frames"]}
+        batch_sh = {
+            k: NamedSharding(mesh, batch_pspec(mesh, axes, v.shape[0], len(v.shape)))
+            for k, v in batch_struct.items()
+        }
+        args = (params_struct, batch_struct)
+        in_sh = (params_sh, batch_sh)
+    else:
+        fn = lambda p, tokens: model.prefill(p, tokens, s)
+        tok = specs["tokens"]
+        tok_sh = NamedSharding(mesh, batch_pspec(mesh, axes, b, 2))
+        args = (params_struct, tok)
+        in_sh = (params_sh, tok_sh)
+
+    cache_struct = jax.eval_shape(lambda *a: fn(*a)[1], *args)
+    cache_sh = cache_shardings(cache_struct, mesh, axes)
+    logits_sh = NamedSharding(mesh, batch_pspec(mesh, axes, b, 2))
+    out_sh = (logits_sh, cache_sh, NamedSharding(mesh, P()))
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    return jitted.lower(*args)
+
+
+def _lower_decode(model: Model, cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                  axes: MeshAxes):
+    params_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    params_sh = tree_shardings(params_struct, mesh, axes)
+    b, s = shape.global_batch, shape.seq_len
+
+    if cfg.family == "encdec":
+        s_enc = s // cfg.enc_frames_divisor
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(b, s, s_enc)
+        )
+    else:
+        cache_struct = jax.eval_shape(lambda: model.init_cache(b, s))
+    cache_sh = cache_shardings(cache_struct, mesh, axes)
+
+    specs = input_specs(cfg, shape)
+    tok_sh = NamedSharding(mesh, batch_pspec(mesh, axes, b, 1))
+    pos_sh = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(mesh, batch_pspec(mesh, axes, b, 2))
+
+    fn = lambda p, cache, tok, pos: model.decode_step(p, cache, tok, pos)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    return jitted.lower(params_struct, cache_struct, specs["token"], specs["pos"])
+
+
+def run_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
+             analysis: bool = True) -> CellResult:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = supports(cfg, shape)
+    if not ok:
+        return CellResult(arch, shape_name, mesh_name, ok=False, skipped=True,
+                          reason=reason)
+    axes = MeshAxes.for_mesh(mesh)
+    model = build_model(cfg)
+
+    def lower_for(c: ArchConfig):
+        m = build_model(c)
+        if shape.kind == "train":
+            return _lower_train(m, c, shape, mesh, axes)
+        if shape.kind == "prefill":
+            return _lower_prefill(m, c, shape, mesh, axes)
+        return _lower_decode(m, c, shape, mesh, axes)
+
+    t0 = time.time()
+    try:
+        with activation_sharding(mesh, default_roles(axes.batch)):
+            compiled = lower_for(cfg).compile()
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        return CellResult(arch, shape_name, mesh_name, ok=False,
+                          reason=f"{type(e).__name__}: {e}"[:2000],
+                          compile_s=time.time() - t0)
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_estimate_bytes": int(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+        ),
+        "hbm_per_device": HBM_PER_DEVICE,
+    }
+    roof_raw = hlo_analysis.analyze(compiled, mesh.devices.size)
+
+    # trip-count-corrected costs via two unrolled small variants
+    roofline = roof_raw.as_dict()
+    try:
+        if analysis:
+            la, lb = _analysis_points(cfg)
+            with activation_sharding(mesh, default_roles(axes.batch)):
+                pa = _measure(lower_for(_unrolled_cfg(cfg, la)).compile(),
+                              mesh.devices.size)
+                pb = _measure(lower_for(_unrolled_cfg(cfg, lb)).compile(),
+                              mesh.devices.size)
+            ext = _extrapolate(pa, pb, la, lb, cfg.n_layers)
+            corrected = hlo_analysis.Roofline(
+                flops_per_device=ext["flops"],
+                bytes_per_device=ext["bytes"],
+                coll_bytes_per_device=float(sum(ext["coll"].values())),
+                coll_breakdown={k: int(v) for k, v in ext["coll"].items()},
+                n_devices=mesh.devices.size,
+            )
+            roofline = corrected.as_dict()
+            roofline["correction"] = "unrolled-2pt-extrapolation"
+    except Exception as e:  # noqa: BLE001 — fall back to raw costs
+        roofline["correction"] = f"failed: {type(e).__name__}: {e}"[:300]
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf_global = hlo_analysis.model_flops(
+        cfg.param_count(), cfg.active_param_count(), tokens, shape.kind
+    )
+    mf_dev = mf_global / mesh.devices.size
+    flops_dev = roofline["flops_per_device"]
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    return CellResult(
+        arch, shape_name, mesh_name, ok=True, compile_s=compile_s,
+        memory=mem, roofline=roofline, roofline_raw=roof_raw.as_dict(),
+        model_flops_per_device=mf_dev, useful_ratio=useful,
+    )
+
+
+def run_cells(archs, shapes, meshes: dict[str, Mesh], out_dir: str | None = None,
+              verbose: bool = True, analysis: bool = True) -> list[CellResult]:
+    results = []
+    for mesh_name, mesh in meshes.items():
+        for arch in archs:
+            for shape_name in shapes:
+                # the roofline table is single-pod; multi-pod cells compile
+                # as proof but skip the 2-pt cost extrapolation
+                res = run_cell(arch, shape_name, mesh, mesh_name,
+                               analysis=analysis and mesh_name == "single")
+                results.append(res)
+                if verbose:
+                    _print_result(res)
+                if out_dir:
+                    os.makedirs(out_dir, exist_ok=True)
+                    fn = f"{arch}__{shape_name}__{mesh_name}.json"
+                    with open(os.path.join(out_dir, fn), "w") as f:
+                        json.dump(res.as_dict(), f, indent=2)
+    return results
+
+
+def _print_result(r: CellResult):
+    if r.skipped:
+        print(f"[SKIP] {r.arch:18s} {r.shape:12s} {r.mesh:6s} — {r.reason[:70]}")
+    elif not r.ok:
+        print(f"[FAIL] {r.arch:18s} {r.shape:12s} {r.mesh:6s} — {r.reason[:160]}")
+    else:
+        m = r.memory
+        roof = r.roofline
+        peak_gib = m["peak_estimate_bytes"] / 2**30
+        print(
+            f"[ OK ] {r.arch:18s} {r.shape:12s} {r.mesh:6s} "
+            f"compile={r.compile_s:6.1f}s peak={peak_gib:6.2f}GiB "
+            f"Tc={roof['t_compute_s']:.3e} Tm={roof['t_memory_s']:.3e} "
+            f"Tcoll={roof['t_collective_s']:.3e} dom={roof['dominant']:10s} "
+            f"useful={r.useful_ratio:.2f}"
+        )

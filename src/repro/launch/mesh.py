@@ -1,0 +1,44 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips (data × model).
+Multi-pod:  2×16×16 = 512 chips (pod × data × model) — the 'pod' axis
+carries the data-parallel replica groups whose gradient all-reduce crosses
+the inter-pod links (and is the target of the int8-compression option).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run "
+            "under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this automatically)"
+        )
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+            devices=devices[:n],
+        )
+    except TypeError:  # older make_mesh without devices kwarg
+        arr = np.asarray(devices[:n]).reshape(shape)
+        return jax.sharding.Mesh(arr, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for in-CI dry-run tests on few fake devices."""
+    n = int(np.prod(shape))
+    arr = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)

@@ -1,0 +1,3 @@
+"""Model zoo: the 10 assigned architectures as config-selectable models."""
+
+from .zoo import build_model  # noqa: F401

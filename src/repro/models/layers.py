@@ -1,0 +1,89 @@
+"""Shared layers: norms, activations, MLPs, embeddings, init helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers (all return cfg-dtype arrays)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: Array, w: Array, b: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        def init(key, d, dtype):
+            return {"w": jnp.ones((d,), dtype)}
+
+        def apply(x, p, eps):
+            return rmsnorm(x, p["w"], eps)
+
+    elif kind == "layernorm":
+        def init(key, d, dtype):
+            return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+        def apply(x, p, eps):
+            return layernorm(x, p["w"], p["b"], eps)
+
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "wg": dense_init(ks[0], d, d_ff, dtype),
+            "wu": dense_init(ks[1], d, d_ff, dtype),
+            "wd": dense_init(ks[2], d_ff, d, dtype),
+        }
+    return {
+        "w1": dense_init(ks[0], d, d_ff, dtype),
+        "w2": dense_init(ks[1], d_ff, d, dtype),
+    }
+
+
+def mlp(x: Array, p: dict, act: str) -> Array:
+    if act == "swiglu":
+        g = jax.nn.silu(x @ p["wg"])
+        return (g * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["w1"]) @ p["w2"]

@@ -1,0 +1,210 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060), chunked.
+
+The selective state space recurrence
+    h_t = exp(A·Δ_t) · h_{t-1} + Δ_t · B_t x_t ;   y_t = C_t h_t + D x_t
+is computed with the SSD chunk decomposition: intra-chunk (quadratic in the
+chunk, runs on the MXU) + inter-chunk state passing (a short scan over
+chunks).  This is the standard TPU-friendly formulation; the sequential
+variant (``mamba2_decode_step``) serves decode.
+
+Simplifications vs the full Mamba2 block (recorded in DESIGN.md): single
+B/C group (n_groups=1), no RMSNorm-gate variant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Array = jax.Array
+
+
+def init_mamba2(key, d_model: int, d_state: int, head_dim: int, expand: int,
+                d_conv: int, dtype):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        # in_proj produces [x (d_inner), z (d_inner), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner + 2 * d_state + n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner + 2 * d_state), jnp.float32) * 0.2).astype(dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),         # A = -exp(A_log)
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "w_out": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _split_proj(proj, d_inner, d_state, n_heads):
+    x, z, B, C, dt = jnp.split(
+        proj,
+        [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state],
+        axis=-1,
+    )
+    return x, z, B, C, dt
+
+
+def _causal_conv(u: Array, w: Array) -> Array:
+    """Depthwise causal conv1d via shifted adds; u: [B, S, C], w: [K, C]."""
+    k = w.shape[0]
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        ui = jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + ui.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(u.dtype)
+
+
+def mamba2_forward(
+    x_in: Array,  # [B, S, D]
+    p: dict,
+    *,
+    d_state: int,
+    head_dim: int,
+    expand: int,
+    chunk: int = 128,
+) -> Array:
+    b, s, d = x_in.shape
+    d_inner = expand * d
+    n_heads = d_inner // head_dim
+
+    from ..dist.activation_sharding import constrain as _constrain
+
+    proj = x_in @ p["w_in"]
+    x, z, B, C, dt = _split_proj(proj, d_inner, d_state, n_heads)
+    # pin the clean d_inner tensors to the tensor axis (the concatenated
+    # proj has split points that cross shard boundaries — constraining it
+    # directly would force resharding gathers)
+    x = _constrain(x, ("batch", None, "tensor"))
+    z = _constrain(z, ("batch", None, "tensor"))
+    xbc = jnp.concatenate([x, B, C], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"]))
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    x = _constrain(x, ("batch", None, "tensor"))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H]
+    xh = x.reshape(b, s, n_heads, head_dim)
+
+    # The SSD recurrence is sequential along S, so the sequence axis cannot
+    # stay sharded here — instead the computation is embarrassingly
+    # parallel over HEADS: pin the head dim to the tensor axis so the f32
+    # chunk transients ([B,L,L,H] decay etc.) shard 16× instead of being
+    # gathered whole (measured: 57 GiB → fits on zamba2 train).
+    from ..dist.activation_sharding import constrain
+
+    xh = constrain(xh, ("batch", None, "tensor", None))
+    dt = constrain(dt, ("batch", None, "tensor"))
+
+    y = _ssd_chunked(
+        xh.astype(jnp.float32), dt, A,
+        B.astype(jnp.float32), C.astype(jnp.float32), chunk,
+    )
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = constrain(y, ("batch", None, "tensor", None))
+    y = y.reshape(b, s, d_inner).astype(x_in.dtype)
+    z = constrain(z, ("batch", None, "tensor"))
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """x: [B,S,H,P] f32; dt: [B,S,H]; A: [H]; B/C: [B,S,N] → y [B,S,H,P].
+
+    One lax.scan over chunks (carry = inter-chunk state [B,H,N,P]) keeps the
+    [L,L,H] intra-chunk decay tensor bounded to a single chunk.
+    """
+    b, s, h, pdim = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    xr = jnp.moveaxis(x.reshape(b, nc, chunk, h, pdim), 1, 0)
+    dtr = jnp.moveaxis(dt.reshape(b, nc, chunk, h), 1, 0)
+    Br = jnp.moveaxis(B.reshape(b, nc, chunk, n), 1, 0)
+    Cr = jnp.moveaxis(C.reshape(b, nc, chunk, n), 1, 0)
+
+    def scan_fn(s_prev, inp):
+        x_c, dt_c, b_c, c_c = inp  # [B,L,H,P], [B,L,H], [B,L,N], [B,L,N]
+        dA = dt_c * A[None, None, :]          # [B,L,H], negative
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1, :]                 # [B,H]
+
+        # intra-chunk
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,L,M,H]
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        cb = jnp.einsum("bln,bmn->blm", c_c, b_c)                 # [B,L,M]
+        w = cb[..., None] * decay * dt_c[:, None, :, :]           # [B,L,M,H]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", w, x_c)
+
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum("bln,blh,bhnp->blhp", c_c, jnp.exp(cum), s_prev)
+
+        # new carry
+        sw = jnp.exp(total[:, None, :] - cum) * dt_c              # [B,L,H]
+        s_c = jnp.einsum("bln,blh,blhp->bhnp", b_c, sw, x_c)
+        s_new = jnp.exp(total)[:, :, None, None] * s_prev + s_c
+        return s_new, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, n, pdim), jnp.float32)
+    _, ys = jax.lax.scan(scan_fn, s0, (xr, dtr, Br, Cr))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, pdim)
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token recurrence)
+# ---------------------------------------------------------------------------
+
+def mamba2_init_cache(batch: int, p: dict, *, d_model: int, d_state: int,
+                      head_dim: int, expand: int, d_conv: int, dtype):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner + 2 * d_state), dtype),
+        "ssm": jnp.zeros((batch, n_heads, d_state, head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode_step(
+    x_in: Array,  # [B, 1, D]
+    cache: dict,
+    p: dict,
+    *,
+    d_state: int,
+    head_dim: int,
+    expand: int,
+):
+    b, _, d = x_in.shape
+    d_inner = expand * d
+    n_heads = d_inner // head_dim
+
+    proj = x_in[:, 0] @ p["w_in"]
+    x, z, B, C, dt = _split_proj(proj, d_inner, d_state, n_heads)
+    xbc = jnp.concatenate([x, B, C], axis=-1)  # [B, C_in]
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # [B, K, C]
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+    )
+    xbc = jax.nn.silu(conv_out).astype(x_in.dtype)
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, n_heads, head_dim).astype(jnp.float32)
+
+    da = jnp.exp(dt * A[None, :])  # [B,H]
+    s_new = (
+        cache["ssm"] * da[:, :, None, None]
+        + jnp.einsum("bn,bh,bhp->bhnp", B.astype(jnp.float32), dt, xh)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), s_new)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, d_inner).astype(x_in.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["w_out"])[:, None]
+    return out, {"conv": window[:, 1:], "ssm": s_new}

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style capacity-bounded
+einsum dispatch, plus DeepSeekMoE shared experts.
+
+The dispatch formulation keeps expert compute proportional to *activated*
+tokens (E · C · FLOPs with E·C = T·k·capacity_factor), so the roofline's
+MoE MODEL_FLOPS uses 6·N_active·D.  Tokens beyond an expert's capacity are
+dropped (standard GShard behavior); the combine weights renormalize over
+surviving assignments.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(key, d: int, d_expert: int, n_experts: int, n_shared: int, dtype):
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d, n_experts, jnp.float32),  # f32 routing
+        "wg": dense_init(ks[1], d, d_expert, dtype, scale=d**-0.5)[None].repeat(n_experts, 0),
+        "wu": dense_init(ks[2], d, d_expert, dtype, scale=d**-0.5)[None].repeat(n_experts, 0),
+        "wd": dense_init(ks[3], d_expert, d, dtype)[None].repeat(n_experts, 0),
+    }
+    # re-randomize per expert (repeat + fold would correlate them)
+    for i, name in enumerate(("wg", "wu", "wd")):
+        shp = p[name].shape
+        p[name] = (
+            jax.random.normal(ks[4 + i], shp, jnp.float32) * shp[1] ** -0.5
+        ).astype(dtype)
+    if n_shared:
+        kss = jax.random.split(ks[0], 3)
+        p["shared"] = {
+            "wg": dense_init(kss[0], d, n_shared * d_expert, dtype),
+            "wu": dense_init(kss[1], d, n_shared * d_expert, dtype),
+            "wd": dense_init(kss[2], n_shared * d_expert, d, dtype),
+        }
+    return p
+
+
+def capacity(tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(math.ceil(tokens * top_k / n_experts * factor))
+    # ≥ top_k so single-token groups (decode) are always drop-free
+    return max(4, top_k, c)
+
+
+def moe_ffn(
+    x: Array,  # [B, S, D]
+    p: dict,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 256,
+) -> Array:
+    """Grouped dispatch (GShard): tokens are routed within fixed-size
+    groups so the dispatch/combine tensors are [G, gs, E, C] with
+    C ∝ gs·k/E — linear in tokens (one global group would be quadratic).
+
+    Groups are sequence-chunks WITHIN a batch row: the reshape
+    [B, S, D] → [B·(S/gs), gs, D] splits the (model-axis-sharded) sequence
+    dim at shard boundaries, so the group dim inherits the (batch × seq)
+    sharding with no data movement.  Forming groups across batch rows
+    instead forces a reshard whose backward XLA resolves by replicating the
+    [T, D] gradient (measured: 24 GiB/device on mixtral train)."""
+    from ..dist.activation_sharding import constrain
+
+    b, s, d = x.shape
+    t = b * s
+    gs_sz = min(group_size, s)
+    if s % gs_sz:
+        gs_sz = s
+    n_groups = t // gs_sz
+    c = capacity(gs_sz, n_experts, top_k, capacity_factor)
+
+    xt = x.reshape(n_groups, gs_sz, d)
+    xt = constrain(xt, ("tokens", None, None))
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xt, p["router"].astype(xt.dtype),
+        preferred_element_type=jnp.float32,
+    )  # [G,gs,E] f32 accumulation without materializing f32 activations
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, top_k)  # [G, gs, k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    onehot = jax.nn.one_hot(topi, n_experts, dtype=jnp.float32)  # [G,gs,k,E]
+    # position of each (token, choice) in its expert's buffer, per group
+    flat = onehot.reshape(n_groups, gs_sz * top_k, n_experts)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0
+    pos = pos.reshape(n_groups, gs_sz, top_k, n_experts)
+    keep = (pos >= 0) & (pos < c)
+    pos = jnp.where(keep, pos, 0.0).astype(jnp.int32)
+
+    pos_onehot = jax.nn.one_hot(pos, c, dtype=jnp.float32) * keep[..., None]
+    dispatch = jnp.einsum("gtke,gtkec->gtec", onehot, pos_onehot)
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec", topv, onehot, pos_onehot)
+    dispatch = constrain(dispatch, ("tokens", None, None, None))
+    combine = constrain(combine, ("tokens", None, None, None))
+
+    expert_in = jnp.einsum(
+        "gtec,gtd->gecd", dispatch.astype(x.dtype), xt,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)  # [G, E, C, D]
+
+    # per-expert SwiGLU
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["wg"]))
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p["wu"])
+    expert_out = jnp.einsum("gecf,efd->gecd", g * u, p["wd"])  # [G, E, C, D]
+
+    out = jnp.einsum(
+        "gtec,gecd->gtd", combine.astype(x.dtype), expert_out,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+    if "shared" in p:
+        sh = p["shared"]
+        gsh = jax.nn.silu(xt @ sh["wg"]) * (xt @ sh["wu"])
+        out = out + gsh @ sh["wd"]
+    out = out.reshape(b, s, d)
+    # re-pin (batch, seq): the un-merge of the group dim is ambiguous to
+    # GSPMD (4096 = B·16 can also read as B-over-256) and the backward
+    # resolves the ambiguity by replicating the [B,S,D] f32 cotangent
+    # (measured: 24 GiB/device on mixtral)
+    return constrain(out, ("batch", "seq", None))

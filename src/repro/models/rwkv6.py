@@ -1,0 +1,207 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+**data-dependent decay** (the architecture's headline feature), computed in
+chunked parallel form, plus the squared-ReLU channel-mix FFN.
+
+Per head (size K=V): state S ∈ R^{K×V};
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ,   w_t = exp(-exp(w0 + LoRA(x_t)))
+
+Chunked evaluation mirrors the SSD trick: within a chunk the lower-
+triangular decay products form an attention-like matrix (MXU-friendly);
+across chunks a scan carries S.  The Pallas kernel (kernels/rwkv6) tiles
+exactly this computation; this module is its jnp reference semantics.
+
+Simplification vs the full Finch block (see DESIGN.md): token-shift uses
+learned static mix coefficients (the data-dependent ddlerp is elided); the
+decay LoRA — the part that makes RWKV6 RWKV6 — is kept.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Array = jax.Array
+
+
+def init_rwkv6(key, d: int, d_ff: int, head_size: int, dtype, lora_r: int = 64):
+    ks = jax.random.split(key, 12)
+    h = d // head_size
+    return {
+        "ln1": {"w": jnp.ones((d,), dtype)},
+        "ln2": {"w": jnp.ones((d,), dtype)},
+        # time-mix
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + (tanh(x A)) B))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": dense_init(ks[5], d, lora_r, dtype),
+        "wB": dense_init(ks[6], lora_r, d, dtype, scale=0.01),
+        "u": (jax.random.normal(ks[7], (h, head_size), jnp.float32) * 0.1),
+        # channel-mix
+        "cmix_k": jnp.full((d,), 0.5, dtype),
+        "ck": dense_init(ks[8], d, d_ff, dtype),
+        "cv": dense_init(ks[9], d_ff, d, dtype),
+    }
+
+
+def _token_shift(x: Array, prev: Array | None = None) -> Array:
+    """x[t-1] (zeros / cache for t=0); x: [B, S, D]."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x * mu + xs * (1.0 - mu)
+
+
+def _decay(xw: Array, p: dict) -> Array:
+    """Data-dependent per-channel decay in (0,1); returns log-decay [.., D]."""
+    lora = jnp.tanh(xw @ p["wA"]) @ p["wB"]
+    return -jnp.exp(p["w0"] + lora.astype(jnp.float32))  # log w_t ≤ 0
+
+
+def rwkv6_time_mix(
+    x: Array,  # [B, S, D] (already ln1-normed)
+    p: dict,
+    head_size: int,
+    shift_state: Array | None = None,
+    wkv_state: Array | None = None,
+    chunk: int = 64,
+):
+    """Returns (out [B,S,D], new_shift [B,D], new_wkv [B,H,K,V])."""
+    b, s, d = x.shape
+    h = d // head_size
+    xs = _token_shift(x, shift_state)
+    r = _mix(x, xs, p["mix_r"]) @ p["wr"]
+    k = _mix(x, xs, p["mix_k"]) @ p["wk"]
+    v = _mix(x, xs, p["mix_v"]) @ p["wv"]
+    g = _mix(x, xs, p["mix_g"]) @ p["wg"]
+    logw = _decay(_mix(x, xs, p["mix_w"]), p)  # [B,S,D] f32
+
+    rh = r.reshape(b, s, h, head_size).astype(jnp.float32)
+    kh = k.reshape(b, s, h, head_size).astype(jnp.float32)
+    vh = v.reshape(b, s, h, head_size).astype(jnp.float32)
+    wh = logw.reshape(b, s, h, head_size)
+
+    s0 = (
+        wkv_state
+        if wkv_state is not None
+        else jnp.zeros((b, h, head_size, head_size), jnp.float32)
+    )
+    out, s_new = _wkv_chunked(rh, kh, vh, wh, p["u"], s0, chunk)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = out * jax.nn.silu(g)
+    return out @ p["wo"], x[:, -1], s_new
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk: int):
+    """r/k/v: [B,S,H,K] f32; logw: [B,S,H,K]; u: [H,K]; s0: [B,H,K,V].
+
+    Within a chunk:
+      out_t = r_t·( prod(w_{<t in chunk}) ⊙ S_in
+                    + Σ_{m<t} (prod_{m<j≤t-1} w_j) ⊙ k_m v_mᵀ
+                    + diag(u) k_t v_tᵀ )
+    """
+    b, s, h, kd = r.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    tri_lo = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly lower
+
+    rr = jnp.moveaxis(r.reshape(b, nc, chunk, h, kd), 1, 0)
+    kk = jnp.moveaxis(k.reshape(b, nc, chunk, h, kd), 1, 0)
+    vv = jnp.moveaxis(v.reshape(b, nc, chunk, h, kd), 1, 0)
+    ww = jnp.moveaxis(logw.reshape(b, nc, chunk, h, kd), 1, 0)
+
+    def scan_fn(s_prev, inp):
+        r_c, k_c, v_c, w_c = inp  # [B,L,H,K]
+        cum = jnp.cumsum(w_c, axis=1)            # [B,L,H,K] log prod w_{≤t}
+        # decay from position m (exclusive) to t (inclusive-of-t? define):
+        # prod_{j=m+1..t} w_j = exp(cum_t - cum_m)
+        # carry-in contribution at t uses prod_{j=1..t} w_j / w_t? — the
+        # state BEFORE t has absorbed w up to t-1: exp(cum_{t-1}) = cum_t - w_t
+        cum_excl = cum - w_c                      # log prod w_{<t}
+        # inter: out_inter_t = r_t · (exp(cum_excl_t) ⊙ S_prev)
+        rd = r_c * jnp.exp(cum_excl)              # [B,L,H,K]
+        out_inter = jnp.einsum("blhk,bhkv->blhv", rd, s_prev)
+
+        # intra (m < t): weight_tm = r_t ⊙ exp(cum_excl_t - cum_m) · k_m
+        # att[b,l,m,h] = Σ_k r[l] exp(cum_excl[l]-cum[m]) k[m]
+        att = jnp.einsum(
+            "blhk,bmhk->blmh",
+            r_c * jnp.exp(cum_excl),
+            k_c * jnp.exp(-cum),
+        )
+        att = jnp.where(tri_lo[None, :, :, None], att, 0.0)
+        out_intra = jnp.einsum("blmh,bmhv->blhv", att, v_c)
+
+        # diagonal bonus term: r_t · (u ⊙ k_t) v_tᵀ
+        diag = jnp.einsum("blhk,hk,blhk->blh", r_c, u, k_c)
+        out_diag = diag[..., None] * v_c
+
+        # new state: S = exp(cum_L) ⊙ S_prev + Σ_m exp(cum_L - cum_m) k_m v_mᵀ
+        total = cum[:, -1]                        # [B,H,K]
+        s_new = jnp.exp(total)[..., None] * s_prev + jnp.einsum(
+            "blhk,blhv->bhkv", k_c * jnp.exp(total[:, None] - cum), v_c
+        )
+        return s_new, out_inter + out_intra + out_diag
+
+    s_fin, ys = jax.lax.scan(scan_fn, s0, (rr, kk, vv, ww))
+    out = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, kd)
+    return out, s_fin
+
+
+def rwkv6_channel_mix(x: Array, p: dict, shift_state: Array | None = None):
+    xs = _token_shift(x, shift_state)
+    xk = _mix(x, xs, p["cmix_k"])
+    hidden = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return hidden @ p["cv"], x[:, -1]
+
+
+def rwkv6_block(x: Array, p: dict, head_size: int, norm_eps: float = 1e-5):
+    """Full block for training/prefill (no cache)."""
+    from .layers import rmsnorm
+
+    a, _, _ = rwkv6_time_mix(rmsnorm(x, p["ln1"]["w"], norm_eps), p, head_size)
+    x = x + a
+    c, _ = rwkv6_channel_mix(rmsnorm(x, p["ln2"]["w"], norm_eps), p)
+    return x + c
+
+
+def rwkv6_init_cache(batch: int, d: int, head_size: int, dtype):
+    h = d // head_size
+    return {
+        "shift_t": jnp.zeros((batch, d), dtype),
+        "shift_c": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, head_size, head_size), jnp.float32),
+    }
+
+
+def rwkv6_decode_step(x: Array, cache: dict, p: dict, head_size: int,
+                      norm_eps: float = 1e-5):
+    """x: [B, 1, D] → (out, new_cache)."""
+    from .layers import rmsnorm
+
+    xn = rmsnorm(x, p["ln1"]["w"], norm_eps)
+    a, shift_t, wkv = rwkv6_time_mix(
+        xn, p, head_size, shift_state=cache["shift_t"], wkv_state=cache["wkv"],
+        chunk=1,
+    )
+    x = x + a
+    xn = rmsnorm(x, p["ln2"]["w"], norm_eps)
+    c, shift_c = rwkv6_channel_mix(xn, p, shift_state=cache["shift_c"])
+    x = x + c
+    return x, {"shift_t": shift_t, "shift_c": shift_c, "wkv": wkv}

@@ -1,0 +1,594 @@
+"""Decoder-only LM covering the dense / MoE / hybrid(Zamba2) / SSM(RWKV6)
+families, driven entirely by ArchConfig.
+
+Layer parameters are stacked along a leading L axis and iterated with
+``lax.scan`` (+ optional remat) so 80-layer configs compile in one layer's
+HLO.  Zamba2's tied shared-attention block runs between scan segments so
+its KV caches stay at n_applications (not n_layers) granularity.
+
+Three entry points per model, all pure functions of (cfg, params, ...):
+    forward      — training/scoring logits over a full sequence
+    prefill      — run the prompt, build decode caches
+    decode_step  — one token against the caches (ring buffers for SWA)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..dist.activation_sharding import constrain
+from . import attention as attn
+from . import mamba2 as m2
+from . import moe as moelib
+from . import rwkv6 as rwkv
+from .layers import dense_init, dtype_of, embed_init, init_mlp, make_norm, mlp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    norm_init, _ = make_norm(cfg.norm)
+    p: dict[str, Any] = {
+        "ln1": norm_init(ks[0], d, dtype),
+        "ln2": norm_init(ks[1], d, dtype),
+        "wq": dense_init(ks[2], d, cfg.n_heads * cfg.d_head, dtype),
+        "wk": dense_init(ks[3], d, cfg.n_kv_heads * cfg.d_head, dtype),
+        "wv": dense_init(ks[4], d, cfg.n_kv_heads * cfg.d_head, dtype),
+        "wo": dense_init(ks[5], cfg.n_heads * cfg.d_head, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.d_head,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), dtype)
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones((cfg.d_head,), dtype)
+        p["kn"] = jnp.ones((cfg.d_head,), dtype)
+    if cfg.is_moe:
+        p["moe"] = moelib.init_moe(
+            ks[6], d, cfg.d_expert, cfg.n_experts, cfg.n_shared_experts, dtype
+        )
+    else:
+        p["mlp"] = init_mlp(ks[7], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _init_block(key, cfg: ArchConfig, dtype):
+    if cfg.family == "ssm":
+        return rwkv.init_rwkv6(key, cfg.d_model, cfg.d_ff, cfg.rwkv_head_size, dtype)
+    if cfg.family == "hybrid":
+        norm_init, _ = make_norm(cfg.norm)
+        ks = jax.random.split(key, 2)
+        return {
+            "ln": norm_init(ks[0], cfg.d_model, dtype),
+            "mamba": m2.init_mamba2(
+                ks[1], cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim,
+                cfg.ssm_expand, cfg.ssm_conv, dtype,
+            ),
+        }
+    return _init_attn_block(key, cfg, dtype)
+
+
+def init_params(cfg: ArchConfig, key: Array) -> dict:
+    dtype = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    norm_init, _ = make_norm(cfg.norm)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_layers)
+    )
+    p = {
+        "embed": embed_init(ks[1], cfg.vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": norm_init(ks[2], cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[3], cfg.d_model, cfg.vocab, dtype, scale=0.02)
+    if cfg.family == "hybrid":
+        p["shared"] = _init_attn_block(ks[4], cfg, dtype)  # tied weights
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _attention_block(x, p, cfg: ArchConfig, positions, q_offset: int = 0,
+                     kv=None):
+    """Pre-norm attention + FFN block.  ``kv`` overrides K/V source (cache)."""
+    _, norm_apply = make_norm(cfg.norm)
+    x = constrain(x, ("batch", "seq", None))  # sequence-parallel residuals
+    b, s, d = x.shape
+    h = norm_apply(x, p["ln1"], cfg.norm_eps)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        from .layers import rmsnorm
+
+        q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        k = rmsnorm(k, p["kn"], cfg.norm_eps)
+    q = attn.apply_rope(q, positions, cfg.rope_theta)
+    k = attn.apply_rope(k, positions, cfg.rope_theta)
+    o = attn.flash_attention(
+        q, k, v, causal=True, window=cfg.window, q_offset=q_offset
+    )
+    x = x + o.reshape(b, s, -1) @ p["wo"]
+    h2 = norm_apply(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y = moelib.moe_ffn(
+            h2, p["moe"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        y = mlp(h2, p["mlp"], cfg.act)
+    # pin the block OUTPUT as well: the scan-over-layers backward carries
+    # this tensor's cotangent between iterations, and without an exit
+    # constraint GSPMD may resolve the carry as replicated (24 GiB f32 on
+    # mixtral; dense models happened to propagate fine)
+    out = constrain(x + y, ("batch", "seq", None))
+    return out, (k, v)
+
+
+def _mamba_block(x, p, cfg: ArchConfig):
+    _, norm_apply = make_norm(cfg.norm)
+    x = constrain(x, ("batch", "seq", None))
+    h = norm_apply(x, p["ln"], cfg.norm_eps)
+    y = m2.mamba2_forward(
+        h, p["mamba"], d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+        expand=cfg.ssm_expand,
+    )
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# forward (train / score)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    # Full recompute (no saveable policy): `dots_with_no_batch_dims_saveable`
+    # classifies every activation matmul as saveable (a plain [T,D]@[D,F]
+    # dot has no dot-general batch dims) and pinned 4×[L,B,S,d_ff] f32
+    # buffers — 32 GiB/device on granite-8b.  Saving only layer inputs
+    # costs one extra forward (the standard ~33% remat overhead).
+    if cfg.remat:
+        return jax.checkpoint(fn)
+    return fn
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: Array) -> Array:
+    """tokens: [B, S] int32 → logits [B, S, V]."""
+    x = forward_hidden(cfg, params, tokens)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (x @ head).astype(jnp.float32)
+
+
+def forward_hidden(cfg: ArchConfig, params: dict, tokens: Array) -> Array:
+    """tokens: [B, S] int32 → final-norm hidden states [B, S, D].
+
+    The training loss projects these through the LM head in sequence
+    chunks (train/train_step.py) so the [B, S, V] logits tensor is never
+    materialized.
+    """
+    _, norm_apply = make_norm(cfg.norm)
+    x = params["embed"][tokens]
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+
+    if cfg.family == "ssm":
+        def block(x, blk):
+            x = constrain(x, ("batch", "seq", None))
+            return rwkv.rwkv6_block(x, blk, cfg.rwkv_head_size, cfg.norm_eps), None
+
+        block = _maybe_remat(block, cfg)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(block, x, params["blocks"])
+        else:
+            for i in range(cfg.n_layers):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, _ = block(x, blk)
+
+    elif cfg.family == "hybrid":
+        period = max(1, cfg.shared_attn_period)
+
+        def mamba_step(x, blk):
+            return _mamba_block(x, blk, cfg), None
+
+        mamba_step = _maybe_remat(mamba_step, cfg)
+        shared_fn = _maybe_remat(
+            lambda x: _attention_block(x, params["shared"], cfg, positions)[0],
+            cfg,
+        )
+        n_seg, rem = divmod(cfg.n_layers, period)
+        layer = 0
+        for seg in range(n_seg):
+            seg_blocks = jax.tree.map(
+                lambda a: a[layer:layer + period], params["blocks"]
+            )
+            if cfg.scan_layers:
+                x, _ = jax.lax.scan(mamba_step, x, seg_blocks)
+            else:
+                for i in range(period):
+                    x, _ = mamba_step(x, jax.tree.map(lambda a: a[i], seg_blocks))
+            x = shared_fn(x)
+            layer += period
+        for i in range(rem):
+            x, _ = mamba_step(x, jax.tree.map(lambda a: a[layer + i], params["blocks"]))
+
+    else:  # dense / moe
+        def block(x, blk):
+            out, _ = _attention_block(x, blk, cfg, positions)
+            return out, None
+
+        block = _maybe_remat(block, cfg)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(block, x, params["blocks"])
+        else:
+            for i in range(cfg.n_layers):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, _ = block(x, blk)
+
+    return norm_apply(x, params["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """All-zeros decode cache (prefill fills it)."""
+    dtype = dtype_of(cfg.dtype)
+    t = cache_len(cfg, max_len)
+    if cfg.family == "ssm":
+        caches = jax.vmap(
+            lambda _: rwkv.rwkv6_init_cache(batch, cfg.d_model, cfg.rwkv_head_size, dtype)
+        )(jnp.arange(cfg.n_layers))
+        return {"rwkv": caches}
+    if cfg.family == "hybrid":
+        n_app = cfg.n_layers // max(1, cfg.shared_attn_period)
+        mamba = jax.vmap(
+            lambda _: m2.mamba2_init_cache(
+                batch, {}, d_model=cfg.d_model, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+                d_conv=cfg.ssm_conv, dtype=dtype,
+            )
+        )(jnp.arange(cfg.n_layers))
+        kv = {
+            "k": jnp.zeros((n_app, batch, t, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((n_app, batch, t, cfg.n_kv_heads, cfg.d_head), dtype),
+        }
+        return {"mamba": mamba, "kv": kv}
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, t, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, t, cfg.n_kv_heads, cfg.d_head), dtype),
+    }
+
+
+def _ring_slots(positions: Array, t: int) -> Array:
+    return jnp.mod(positions, t)
+
+
+def _write_kv(cache_k, cache_v, k, v, positions, t):
+    """Scatter K/V rows at ring slots; k: [B, S, Hkv, D]."""
+    slots = _ring_slots(positions, t)
+    ck = cache_k.at[:, slots].set(jnp.moveaxis(k, 1, 1))
+    cv = cache_v.at[:, slots].set(v)
+    return ck, cv
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: Array, max_len: int):
+    """Run the prompt; returns (last-token logits [B, V], cache, pos)."""
+    _, norm_apply = make_norm(cfg.norm)
+    b, s = tokens.shape
+    t = cache_len(cfg, max_len)
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+    cache = init_cache(cfg, b, max_len)
+
+    if cfg.family == "ssm":
+        def block(x, blk_and_cache):
+            blk, _ = blk_and_cache
+            from .layers import rmsnorm
+
+            h = rmsnorm(x, blk["ln1"]["w"], cfg.norm_eps)
+            a, shift_t, wkv = rwkv.rwkv6_time_mix(h, blk, cfg.rwkv_head_size)
+            x = x + a
+            h2 = rmsnorm(x, blk["ln2"]["w"], cfg.norm_eps)
+            c, shift_c = rwkv.rwkv6_channel_mix(h2, blk)
+            x = x + c
+            return x, {"shift_t": shift_t, "shift_c": shift_c, "wkv": wkv}
+
+        if cfg.scan_layers:
+            x, new_caches = jax.lax.scan(block, x, (params["blocks"], cache["rwkv"]))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                c = jax.tree.map(lambda a: a[i], cache["rwkv"])
+                x, nc = block(x, (blk, c))
+                outs.append(nc)
+            new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        cache = {"rwkv": new_caches}
+
+    elif cfg.family == "hybrid":
+        period = max(1, cfg.shared_attn_period)
+        n_seg = cfg.n_layers // period
+        rem = cfg.n_layers - n_seg * period
+        mamba_caches = []
+
+        def mamba_prefill(x, blk):
+            _, norm_apply2 = make_norm(cfg.norm)
+            h = norm_apply2(x, blk["ln"], cfg.norm_eps)
+            # full forward + terminal state via chunked scan, then rebuild
+            # terminal cache with a tail pass (cheap: one decode-form step
+            # would need the running state; we recompute states chunked)
+            y, conv_state, ssm_state = _mamba_prefill_with_state(h, blk["mamba"], cfg)
+            return x + y, {"conv": conv_state, "ssm": ssm_state}
+
+        layer = 0
+        kv_k, kv_v = [], []
+        for seg in range(n_seg):
+            for i in range(period):
+                blk = jax.tree.map(lambda a: a[layer], params["blocks"])
+                x, mc = mamba_prefill(x, blk)
+                mamba_caches.append(mc)
+                layer += 1
+            x, (k, v) = _attention_block(x, params["shared"], cfg, positions)
+            kv_k.append(k)
+            kv_v.append(v)
+        for i in range(rem):
+            blk = jax.tree.map(lambda a: a[layer], params["blocks"])
+            x, mc = mamba_prefill(x, blk)
+            mamba_caches.append(mc)
+            layer += 1
+
+        mamba = jax.tree.map(lambda *xs: jnp.stack(xs), *mamba_caches)
+        ck = cache["kv"]["k"]
+        cv = cache["kv"]["v"]
+        for a_i, (k, v) in enumerate(zip(kv_k, kv_v)):
+            ks, vs = _tail_ring(k, v, t, s)
+            ck = ck.at[a_i].set(ks)
+            cv = cv.at[a_i].set(vs)
+        cache = {"mamba": mamba, "kv": {"k": ck, "v": cv}}
+
+    else:
+        def block(x, blk_and_cache):
+            blk, c = blk_and_cache
+            x, (k, v) = _attention_block(x, blk, cfg, positions)
+            ks, vs = _tail_ring(k, v, t, s)
+            return x, {"k": ks, "v": vs}
+
+        if cfg.scan_layers:
+            x, new_kv = jax.lax.scan(
+                block, x, (params["blocks"], {"k": cache["k"], "v": cache["v"]})
+            )
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                c = {"k": cache["k"][i], "v": cache["v"][i]}
+                x, nc = block(x, (blk, c))
+                outs.append(nc)
+            new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        cache = new_kv
+
+    x = norm_apply(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return logits, cache, jnp.asarray(s, jnp.int32)
+
+
+def _tail_ring(k: Array, v: Array, t: int, s: int):
+    """Store the last t positions of k/v ([B,S,H,D]) ring-aligned."""
+    if s <= t:
+        pad = t - s
+        ks = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return ks, vs
+    tail_k = k[:, s - t:]
+    tail_v = v[:, s - t:]
+    slots = jnp.mod(jnp.arange(s - t, s), t)
+    ks = jnp.zeros_like(tail_k).at[:, slots].set(tail_k)
+    vs = jnp.zeros_like(tail_v).at[:, slots].set(tail_v)
+    return ks, vs
+
+
+def _mamba_prefill_with_state(h, p, cfg: ArchConfig):
+    """Forward a full prompt AND return terminal (conv, ssm) states."""
+    b, s, d = h.shape
+    d_inner = cfg.ssm_expand * d
+    n_heads = d_inner // cfg.ssm_head_dim
+
+    proj = h @ p["w_in"]
+    x, z, B, C, dt = m2._split_proj(proj, d_inner, cfg.ssm_state, n_heads)
+    xbc = jnp.concatenate([x, B, C], axis=-1)
+    conv_state = xbc[:, -(cfg.ssm_conv - 1):]  # terminal conv window
+    xbc = jax.nn.silu(m2._causal_conv(xbc, p["conv_w"]))
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + cfg.ssm_state], axis=-1)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, s, n_heads, cfg.ssm_head_dim).astype(jnp.float32)
+
+    y = m2._ssd_chunked(xh, dtp, A, B.astype(jnp.float32), C.astype(jnp.float32), 128)
+    # terminal ssm state: run the chunk recurrence once more over all steps
+    ssm_state = _terminal_state(xh, dtp, A, B.astype(jnp.float32))
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(h.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], conv_state, ssm_state
+
+
+def _terminal_state(x, dt, A, B):
+    """S_T = Σ_m exp(Σ_{j>m} dA_j) dt_m B_m x_mᵀ (f32)."""
+    dA = dt * A[None, None, :]
+    cum = jnp.cumsum(dA, axis=1)
+    total = cum[:, -1:, :]
+    w = jnp.exp(total - cum) * dt  # [B,S,H]
+    return jnp.einsum("bsn,bsh,bshp->bhnp", B, w, x)
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: Array,
+                pos: Array):
+    """token: [B] int32; pos: [] int32 → (logits [B, V], new cache)."""
+    _, norm_apply = make_norm(cfg.norm)
+    x = params["embed"][token][:, None]  # [B, 1, D]
+    b = x.shape[0]
+    positions = pos[None].astype(jnp.int32)  # [1]
+
+    if cfg.family == "ssm":
+        def block(x, blk_and_cache):
+            blk, c = blk_and_cache
+            x, new_c = rwkv.rwkv6_decode_step(x, c, blk, cfg.rwkv_head_size, cfg.norm_eps)
+            return x, new_c
+
+        if cfg.scan_layers:
+            x, new_caches = jax.lax.scan(block, x, (params["blocks"], cache["rwkv"]))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                c = jax.tree.map(lambda a: a[i], cache["rwkv"])
+                x, nc = block(x, (blk, c))
+                outs.append(nc)
+            new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache = {"rwkv": new_caches}
+
+    elif cfg.family == "hybrid":
+        period = max(1, cfg.shared_attn_period)
+        n_app = cfg.n_layers // period
+        t = cache["kv"]["k"].shape[2]
+
+        def mamba_step(x, blk_and_cache):
+            blk, c = blk_and_cache
+            h = norm_apply(x, blk["ln"], cfg.norm_eps)
+            y, new_c = m2.mamba2_decode_step(
+                h, c, blk["mamba"], d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            )
+            return x + y, new_c
+
+        def run_segment(x, lo, hi):
+            seg_blocks = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+            seg_cache = jax.tree.map(lambda a: a[lo:hi], cache["mamba"])
+            if cfg.scan_layers:
+                return jax.lax.scan(mamba_step, x, (seg_blocks, seg_cache))
+            outs = []
+            for i in range(hi - lo):
+                blk = jax.tree.map(lambda a: a[i], seg_blocks)
+                c = jax.tree.map(lambda a: a[i], seg_cache)
+                x, nc = mamba_step(x, (blk, c))
+                outs.append(nc)
+            return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+        new_mamba = []
+        ck, cv = cache["kv"]["k"], cache["kv"]["v"]
+        layer = 0
+        for app in range(n_app):
+            x, seg_new = run_segment(x, layer, layer + period)
+            new_mamba.append(seg_new)
+            x, ck, cv = _decode_attn(
+                x, params["shared"], cfg, ck, cv, app, pos, t
+            )
+            layer += period
+        rem = cfg.n_layers - layer
+        if rem:
+            x, seg_new = run_segment(x, layer, cfg.n_layers)
+            new_mamba.append(seg_new)
+        mamba = jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_mamba)
+        new_cache = {"mamba": mamba, "kv": {"k": ck, "v": cv}}
+
+    else:
+        t = cache["k"].shape[2]
+
+        def block(x, blk_and_cache):
+            blk, c = blk_and_cache
+            x, ck, cv = _decode_attn_rows(x, blk, cfg, c["k"], c["v"], pos, t)
+            return x, {"k": ck, "v": cv}
+
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(block, x, (params["blocks"], cache))
+        else:
+            outs = []
+            for i in range(cfg.n_layers):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                c = jax.tree.map(lambda a: a[i], cache)
+                x, nc = block(x, (blk, c))
+                outs.append(nc)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    x = norm_apply(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _decode_qkv(x, p, cfg: ArchConfig, pos):
+    b = x.shape[0]
+    _, norm_apply = make_norm(cfg.norm)
+    h = norm_apply(x, p["ln1"], cfg.norm_eps)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        from .layers import rmsnorm
+
+        q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        k = rmsnorm(k, p["kn"], cfg.norm_eps)
+    positions = pos[None]
+    q = attn.apply_rope(q, positions, cfg.rope_theta)
+    k = attn.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _decode_attn_rows(x, p, cfg: ArchConfig, cache_k, cache_v, pos, t):
+    """Single-layer decode attention + FFN; cache_k/v: [B, T, Hkv, D]."""
+    b = x.shape[0]
+    q, k, v = _decode_qkv(x, p, cfg, pos)
+    slot = jnp.mod(pos, t)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    o = attn.decode_attention(q, cache_k, cache_v, pos, window=cfg.window)
+    x = x + o.reshape(b, 1, -1) @ p["wo"]
+    _, norm_apply = make_norm(cfg.norm)
+    h2 = norm_apply(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        # single-token groups (s=1) are inherently drop-free: each group
+        # carries exactly top_k assignments and capacity ≥ top_k
+        y = moelib.moe_ffn(
+            h2, p["moe"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        y = mlp(h2, p["mlp"], cfg.act)
+    return x + y, cache_k, cache_v
+
+
+def _decode_attn(x, p, cfg: ArchConfig, ck, cv, app: int, pos, t):
+    """Shared-block decode for zamba2 (cache rows [n_app, ...])."""
+    x, k_new, v_new = _decode_attn_rows(x, p, cfg, ck[app], cv[app], pos, t)
+    return x, ck.at[app].set(k_new), cv.at[app].set(v_new)

@@ -1,0 +1,59 @@
+"""Model zoo façade: uniform (init / forward / prefill / decode) API over
+all families, dispatched on ArchConfig."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import encdec, transformer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[Array], dict]
+    forward: Callable[[dict, Any], Array]           # (params, batch) → logits
+    forward_hidden: Callable[[dict, Any], Array]    # (params, batch) → [B,S,D]
+    prefill: Callable[..., tuple]                   # (params, batch, max_len)
+    decode_step: Callable[..., tuple]               # (params, cache, token, pos)
+    init_cache: Callable[..., dict]
+
+    def head_matrix(self, params: dict) -> Array:
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            forward=lambda p, batch: encdec.forward(cfg, p, batch),
+            forward_hidden=lambda p, batch: encdec.forward_hidden(cfg, p, batch),
+            prefill=lambda p, batch, max_len: encdec.prefill(cfg, p, batch, max_len),
+            decode_step=lambda p, cache, tok, pos: encdec.decode_step(cfg, p, cache, tok, pos),
+            init_cache=lambda batch, max_len, s_enc: encdec.init_cache(cfg, batch, max_len, s_enc),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        forward=lambda p, batch: transformer.forward(
+            cfg, p, batch["tokens"] if isinstance(batch, dict) else batch
+        ),
+        forward_hidden=lambda p, batch: transformer.forward_hidden(
+            cfg, p, batch["tokens"] if isinstance(batch, dict) else batch
+        ),
+        prefill=lambda p, batch, max_len: transformer.prefill(
+            cfg, p, batch["tokens"] if isinstance(batch, dict) else batch, max_len
+        ),
+        decode_step=lambda p, cache, tok, pos: transformer.decode_step(cfg, p, cache, tok, pos),
+        init_cache=lambda batch, max_len, s_enc=None: transformer.init_cache(cfg, batch, max_len),
+    )

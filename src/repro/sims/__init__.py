@@ -1,0 +1,7 @@
+"""The paper's simulation workloads (§5.1, App. C): traffic (MITSIM lane
+changing + car following), fish school (Couzin information transfer), and
+the predator simulation with non-local effect assignments."""
+
+from .fish import make_fish_class, make_fish_sim  # noqa: F401
+from .predator import make_predator_class, make_predator_sim  # noqa: F401
+from .traffic import make_traffic_class, make_traffic_sim  # noqa: F401

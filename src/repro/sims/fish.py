@@ -1,0 +1,110 @@
+"""Couzin fish-school simulation (paper §5.1 / App. C; Couzin et al. 2005).
+
+Zonal model: repulsion inside radius α (highest priority), attraction +
+alignment between α and the visibility radius ρ.  *Informed individuals*
+carry a preferred direction (px, py ≠ 0) balanced against the social vector
+with weight ω — two informed subgroups pulling in different directions make
+the school's spatial distribution drift over time, which is exactly what
+exercises the load balancer (paper Fig. 7/8).
+
+All emissions are local (gather-form), matching the paper's observation
+that the fish simulation needs only a single reducer per node.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..brasil import AgentClass, Eff, Other, Param, Self, rand_normal, sqrt, where
+from ..core.engine import Simulation
+
+
+def make_fish_class(
+    rho: float = 1.0,
+    alpha: float = 0.15,
+    speed: float = 0.05,
+    omega: float = 0.5,
+    noise: float = 0.05,
+) -> AgentClass:
+    F = AgentClass("Fish", position=("x", "y"), visibility=(rho, rho), radius=rho)
+    F.state("x", reach=speed).state("y", reach=speed)
+    F.state("hx").state("hy")          # heading (unit)
+    F.state("px").state("py")          # preferred direction (0 for uninformed)
+    for e in ("rx", "ry", "ax", "ay", "ox", "oy", "cnt_r", "cnt_a"):
+        F.effect(e, "sum")
+    F.param("speed", speed).param("omega", omega).param("noise", noise)
+    F.param("alpha", alpha)
+
+    eps = 1e-6
+    dx = Other("x") - Self("x")
+    dy = Other("y") - Self("y")
+    dist = sqrt(dx * dx + dy * dy) + eps
+    near = dist < Param("alpha")
+
+    # repulsion zone (priority)
+    F.emit("self", "rx", -dx / dist, where=near)
+    F.emit("self", "ry", -dy / dist, where=near)
+    F.emit("self", "cnt_r", 1.0, where=near)
+    # attraction + orientation zone
+    F.emit("self", "ax", dx / dist, where=~near)
+    F.emit("self", "ay", dy / dist, where=~near)
+    F.emit("self", "ox", Other("hx"), where=~near)
+    F.emit("self", "oy", Other("hy"), where=~near)
+    F.emit("self", "cnt_a", 1.0, where=~near)
+
+    # update: social vector, informed bias, noise, renormalize
+    repulsed = Eff("cnt_r") > 0.5
+    sx = where(repulsed, Eff("rx"), Eff("ax") + Eff("ox"))
+    sy = where(repulsed, Eff("ry"), Eff("ay") + Eff("oy"))
+    lonely = (Eff("cnt_r") + Eff("cnt_a")) < 0.5
+    sx = where(lonely, Self("hx"), sx)
+    sy = where(lonely, Self("hy"), sy)
+    dxp = sx + Param("omega") * Self("px") + Param("noise") * rand_normal()
+    dyp = sy + Param("omega") * Self("py") + Param("noise") * rand_normal()
+    norm = sqrt(dxp * dxp + dyp * dyp) + eps
+    F.update("hx", dxp / norm)
+    F.update("hy", dyp / norm)
+    # positions move with the OLD heading (state-effect: updates read states
+    # of tick t, not each other)
+    F.update("x", Self("x") + Param("speed") * Self("hx"))
+    F.update("y", Self("y") + Param("speed") * Self("hy"))
+    return F
+
+
+def make_fish_sim(
+    world: tuple[float, float] = (40.0, 10.0),
+    **kw,
+) -> Simulation:
+    F = make_fish_class(**kw)
+    return Simulation.build(F, world_lo=(0.0, 0.0), world_hi=world)
+
+
+def init_school(
+    sim: Simulation,
+    n: int,
+    capacity: int,
+    seed: int = 0,
+    informed_fraction: float = 0.1,
+    directions=((1.0, 0.0), (-1.0, 0.0)),
+    center: tuple[float, float] | None = None,
+    spread: float = 2.0,
+):
+    """Two informed subgroups with opposing preferred directions (Fig. 7)."""
+    rs = np.random.RandomState(seed)
+    lo, hi = sim.world_lo, sim.world_hi
+    cx = (lo[0] + hi[0]) / 2 if center is None else center[0]
+    cy = (lo[1] + hi[1]) / 2 if center is None else center[1]
+    x = rs.normal(cx, spread, n).clip(lo[0], hi[0]).astype(np.float32)
+    y = rs.normal(cy, spread, n).clip(lo[1], hi[1]).astype(np.float32)
+    theta = rs.uniform(0, 2 * np.pi, n)
+    hx = np.cos(theta).astype(np.float32)
+    hy = np.sin(theta).astype(np.float32)
+    px = np.zeros(n, np.float32)
+    py = np.zeros(n, np.float32)
+    n_inf = int(n * informed_fraction)
+    half = n_inf // 2
+    px[:half], py[:half] = directions[0]
+    px[half:n_inf], py[half:n_inf] = directions[1]
+    return sim.init_population(
+        capacity, oid=np.arange(n), x=x, y=y, hx=hx, hy=hy, px=px, py=py
+    )

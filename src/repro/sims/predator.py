@@ -1,0 +1,189 @@
+"""Predator simulation with non-local effect assignments (paper §5.1/App. C).
+
+"A fish can 'spawn' new fish and 'bite' other fish, possibly killing them,
+so density naturally approaches an equilibrium" — inspired by artificial-
+society simulations.  The *bite* is the paper's canonical non-local effect:
+a predator assigns a ``hurt`` effect to prey in its bite radius.
+
+Two scripts, identical semantics (paper: "we program biting behavior either
+as a non-local effect assignment ... or as a local one ... in otherwise
+identical BRASIL scripts"):
+
+  * scatter form (``inverted=False``): pred → ``Other.hurt <- damage``
+    ⇒ BRACE needs the two-pass map-reduce-reduce (Fig. 5's 2-reduce bars);
+  * gather form (``inverted=True``): produced *automatically* by the
+    compiler's effect inversion (Thm 2) — our compiler implements what the
+    paper hand-wrote — ⇒ single reduce pass.
+
+Deaths are in-tick (alive mask); spawning is a host-side epoch hook into
+free capacity slots (master.py), keeping shapes static.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..brasil import (
+    AgentClass,
+    Eff,
+    Other,
+    Param,
+    Self,
+    invert_effects,
+    rand_normal,
+    sqrt,
+    where,
+)
+from ..core.agents import AgentState
+from ..core.engine import Simulation
+
+
+def make_predator_class(
+    rho: float = 1.0,
+    bite_r: float = 0.25,
+    damage: float = 30.0,
+    regen: float = 3.0,
+    starve: float = 1.5,
+    feed: float = 12.0,
+    speed: float = 0.06,
+    noise: float = 0.3,
+    inverted: bool = False,
+) -> AgentClass:
+    P = AgentClass("Agent", position=("x", "y"), visibility=(rho, rho), radius=rho)
+    P.state("x", reach=speed).state("y", reach=speed)
+    P.state("kind")      # 0 = prey, 1 = predator
+    P.state("health")
+    P.effect("hurt", "sum")      # the non-local effect
+    P.effect("fed", "sum")       # predator's meals (local gather)
+    P.effect("fleex", "sum").effect("fleey", "sum")   # prey threat vector
+    P.effect("chasex", "min_by", payload=["dx", "dy"])  # nearest prey
+    for name, val in dict(
+        bite_r=bite_r, damage=damage, regen=regen, starve=starve,
+        feed=feed, speed=speed, noise=noise,
+    ).items():
+        P.param(name, val)
+
+    eps = 1e-6
+    dx = Other("x") - Self("x")
+    dy = Other("y") - Self("y")
+    dist2 = dx * dx + dy * dy
+    dist = sqrt(dist2) + eps
+    i_pred = Self("kind") > 0.5
+    o_pred = Other("kind") > 0.5
+    in_bite = dist2 < Param("bite_r") * Param("bite_r")
+
+    # THE non-local assignment: predator hurts prey (scatter form)
+    P.emit("other", "hurt", Param("damage"), where=i_pred & ~o_pred & in_bite)
+    # predator's feeding is the symmetric local gather (kept local so the
+    # scatter/gather scripts differ ONLY in the hurt assignment, like Fig. 5)
+    P.emit("self", "fed", Param("feed"), where=i_pred & ~o_pred & in_bite)
+    # prey flees predators; predators chase nearest prey
+    P.emit("self", "fleex", -dx / dist, where=~i_pred & o_pred)
+    P.emit("self", "fleey", -dy / dist, where=~i_pred & o_pred)
+    P.emit(
+        "self", "chasex", {"key": dist2, "dx": dx, "dy": dy},
+        where=i_pred & ~o_pred,
+    )
+
+    # ---- update -------------------------------------------------------------
+    is_pred = Self("kind") > 0.5
+    # movement
+    cx = Eff("chasex", "dx")
+    cy = Eff("chasex", "dy")
+    has_prey = Eff("chasex") < 1.0e30
+    pnorm = sqrt(cx * cx + cy * cy) + eps
+    mx_pred = where(has_prey, cx / pnorm, 0.0) + Param("noise") * rand_normal()
+    my_pred = where(has_prey, cy / pnorm, 0.0) + Param("noise") * rand_normal()
+    fx = Eff("fleex")
+    fy = Eff("fleey")
+    fnorm = sqrt(fx * fx + fy * fy) + eps
+    threatened = fnorm > 0.1
+    mx_prey = where(threatened, fx / fnorm, 0.0) + Param("noise") * rand_normal()
+    my_prey = where(threatened, fy / fnorm, 0.0) + Param("noise") * rand_normal()
+    mx = where(is_pred, mx_pred, mx_prey)
+    my = where(is_pred, my_pred, my_prey)
+    mnorm = sqrt(mx * mx + my * my) + eps
+    P.update("x", Self("x") + Param("speed") * mx / mnorm)
+    P.update("y", Self("y") + Param("speed") * my / mnorm)
+    # health: prey regenerate and take bites; predators starve and feed
+    from ..brasil import minimum
+
+    h_prey = Self("health") + Param("regen") - Eff("hurt")
+    h_pred = Self("health") - Param("starve") + Eff("fed")
+    h_new = where(is_pred, h_pred, h_prey)
+    P.update("health", minimum(h_new, 100.0))
+    P.kill(h_new <= 0.0)
+
+    if inverted:
+        return invert_effects(P)
+    return P
+
+
+def make_predator_sim(
+    world: tuple[float, float] = (20.0, 20.0), inverted: bool = False, **kw
+) -> Simulation:
+    P = make_predator_class(inverted=inverted, **kw)
+    return Simulation.build(P, world_lo=(0.0, 0.0), world_hi=world)
+
+
+def init_population(
+    sim: Simulation,
+    n_prey: int,
+    n_pred: int,
+    capacity: int,
+    seed: int = 0,
+):
+    rs = np.random.RandomState(seed)
+    n = n_prey + n_pred
+    lo, hi = sim.world_lo, sim.world_hi
+    x = rs.uniform(lo[0], hi[0], n).astype(np.float32)
+    y = rs.uniform(lo[1], hi[1], n).astype(np.float32)
+    kind = np.concatenate(
+        [np.zeros(n_prey, np.float32), np.ones(n_pred, np.float32)]
+    )
+    health = np.full(n, 80.0, np.float32)
+    return sim.init_population(
+        capacity, oid=np.arange(n), x=x, y=y, kind=kind, health=health
+    )
+
+
+def make_spawn_hook(
+    spawn_threshold: float = 95.0,
+    spawn_health: float = 50.0,
+    jitter: float = 0.2,
+    max_spawn_per_epoch: int = 64,
+    seed: int = 0,
+):
+    """Host-side epoch hook: healthy prey split into free capacity slots."""
+    rs = np.random.RandomState(seed)
+
+    def hook(state: AgentState, tick: int) -> AgentState:
+        import jax.numpy as jnp
+
+        alive = np.asarray(state.alive).copy()
+        health = np.asarray(state.fields["health"]).copy()
+        kind = np.asarray(state.fields["kind"]).copy()
+        x = np.asarray(state.fields["x"]).copy()
+        y = np.asarray(state.fields["y"]).copy()
+        oid = np.asarray(state.oid).copy()
+
+        parents = np.nonzero(alive & (kind < 0.5) & (health >= spawn_threshold))[0]
+        free = np.nonzero(~alive)[0]
+        k = min(len(parents), len(free), max_spawn_per_epoch)
+        if k > 0:
+            ps, fs = parents[:k], free[:k]
+            alive[fs] = True
+            kind[fs] = 0.0
+            health[fs] = spawn_health
+            health[ps] = health[ps] - spawn_health * 0.5
+            x[fs] = x[ps] + rs.uniform(-jitter, jitter, k).astype(np.float32)
+            y[fs] = y[ps] + rs.uniform(-jitter, jitter, k).astype(np.float32)
+            oid[fs] = oid.max() + 1 + np.arange(k)
+        fields = dict(state.fields)
+        fields.update(
+            x=jnp.asarray(x), y=jnp.asarray(y),
+            kind=jnp.asarray(kind), health=jnp.asarray(health),
+        )
+        return AgentState(alive=jnp.asarray(alive), oid=jnp.asarray(oid), fields=fields)
+
+    return hook

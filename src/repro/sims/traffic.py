@@ -1,0 +1,184 @@
+"""Traffic simulation with MITSIM's lane-selection and car-following models
+(paper §5.1 / App. C; Yang & Koutsopoulos 1999).
+
+Per tick each driver (agent) inspects, within a fixed lookahead distance ρ
+(the paper fixes ρ=200 to enable spatial indexing, App. C):
+
+  * the lead and rear vehicles in her current / left / right lanes
+    (``min_by`` effects keyed by gap — decomposable, order-independent),
+  * per-lane average velocity and density (``sum`` effects),
+
+then (update phase) computes a lane utility, makes a probabilistic lane
+change gated by lead/rear safety gaps (with the MITSIM right-most-lane
+reluctance factor, App. C), and adapts velocity with a three-regime
+car-following model (free flow / following / emergency braking).
+
+The road is a circular segment (x wraps at length L) so the population and
+density are stationary — the standard benchmarking variant of MITSIM's
+constant-upstream-inflow linear segment.  All effects are local gathers, so
+BRACE runs it with a single reduce pass (paper §5.1: "Neither of these
+simulations uses non-local effect assignments").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..brasil import (
+    AgentClass,
+    Eff,
+    Other,
+    Param,
+    Self,
+    abs_,
+    clip,
+    floor,
+    maximum,
+    minimum,
+    rand_uniform,
+    to_float,
+    where,
+)
+from ..core.engine import Simulation
+
+BIG = 1.0e30  # "no vehicle found" marker from the min_by identity
+
+
+def _wdelta(d, period: float):
+    """Shortest signed delta on the circular road (AST-level)."""
+    return d - period * floor(d / period + 0.5)
+
+
+def make_traffic_class(
+    length: float = 4000.0,
+    n_lanes: int = 4,
+    lookahead: float = 200.0,
+    vmax: float = 30.0,
+    dt: float = 1.0,
+    a_acc: float = 2.0,
+    b_dec: float = 4.0,
+    k_follow: float = 0.6,
+    h_upper: float = 2.0,   # free-flow headway (s)
+    h_lower: float = 0.6,   # emergency headway (s)
+    g_min: float = 4.0,     # minimum standstill gap (m)
+    g_lead_safe: float = 10.0,
+    g_rear_safe: float = 8.0,
+    w_v: float = 1.0,
+    w_g: float = 0.05,
+    lc_threshold: float = 2.0,
+    p_lc: float = 0.6,
+    right_reluctance: float = 10.0,
+) -> AgentClass:
+    T = AgentClass("Car", position=("x", "lane"), visibility=(lookahead, 1.2))
+    T.state("x", reach=vmax * dt * 1.5, wrap=length)
+    T.state("lane", reach=1.0)
+    T.state("v")
+    for p, v in dict(
+        vmax=vmax, dt=dt, a_acc=a_acc, b_dec=b_dec, k_follow=k_follow,
+        h_upper=h_upper, h_lower=h_lower, g_min=g_min,
+        g_lead_safe=g_lead_safe, g_rear_safe=g_rear_safe,
+        w_v=w_v, w_g=w_g, lc_threshold=lc_threshold, p_lc=p_lc,
+        right_reluctance=right_reluctance, lookahead=lookahead,
+        n_lanes=float(n_lanes),
+    ).items():
+        T.param(p, v)
+
+    # lead/rear vehicle per lane (min_by gap), lane speed/density sums
+    for lane_tag in ("s", "l", "r"):
+        T.effect(f"lead_{lane_tag}", "min_by", payload=["v"])
+        T.effect(f"rear_{lane_tag}", "min_by", payload=["v"])
+        T.effect(f"cnt_{lane_tag}", "sum")
+        T.effect(f"sumv_{lane_tag}", "sum")
+
+    d = _wdelta(Other("x") - Self("x"), length)
+    dlane = Other("lane") - Self("lane")
+    same = abs_(dlane) < 0.5
+    left = (dlane < -0.5) & (dlane > -1.5)
+    right = (dlane > 0.5) & (dlane < 1.5)
+    ahead = d > 0.0
+    behind = d < 0.0
+
+    for tag, lane_sel in (("s", same), ("l", left), ("r", right)):
+        T.emit("self", f"lead_{tag}", {"key": d, "v": Other("v")},
+               where=lane_sel & ahead)
+        T.emit("self", f"rear_{tag}", {"key": -d, "v": Other("v")},
+               where=lane_sel & behind)
+        T.emit("self", f"cnt_{tag}", 1.0, where=lane_sel)
+        T.emit("self", f"sumv_{tag}", Other("v"), where=lane_sel)
+
+    # ---- update phase -------------------------------------------------------
+    def lane_stats(tag):
+        gap_lead = Eff(f"lead_{tag}")           # key = gap; BIG when none
+        vlead = Eff(f"lead_{tag}", "v")
+        gap_rear = Eff(f"rear_{tag}")
+        cnt = Eff(f"cnt_{tag}")
+        avgv = where(cnt > 0.5, Eff(f"sumv_{tag}") / maximum(cnt, 1.0), Param("vmax"))
+        return gap_lead, vlead, gap_rear, avgv
+
+    gap_s, vlead_s, _, avgv_s = lane_stats("s")
+    gap_l, _, rear_l, avgv_l = lane_stats("l")
+    gap_r, _, rear_r, avgv_r = lane_stats("r")
+
+    v = Self("v")
+    lane = Self("lane")
+
+    # car following: free flow / following / emergency (MITSIM regimes)
+    none_ahead = gap_s > BIG * 0.5
+    free = none_ahead | (gap_s > Param("g_min") + v * Param("h_upper"))
+    emergency = (~none_ahead) & (gap_s < Param("g_min") + v * Param("h_lower"))
+    v_free = minimum(Param("vmax"), v + Param("a_acc") * Param("dt"))
+    v_follow = v + Param("k_follow") * (vlead_s - v) * Param("dt")
+    v_emerg = maximum(0.0, minimum(vlead_s, v - Param("b_dec") * Param("dt")))
+    v_new = where(free, v_free, where(emergency, v_emerg, v_follow))
+
+    # lane utilities (clamped gaps) + right-most-lane reluctance
+    cap = Param("lookahead")
+    u_s = Param("w_v") * avgv_s + Param("w_g") * minimum(gap_s, cap)
+    u_l = Param("w_v") * avgv_l + Param("w_g") * minimum(gap_l, cap)
+    u_r = (
+        Param("w_v") * avgv_r
+        + Param("w_g") * minimum(gap_r, cap)
+        - where(lane + 1.0 > Param("n_lanes") - 1.5, Param("right_reluctance"), 0.0)
+    )
+
+    valid_l = lane > 0.5
+    valid_r = lane < Param("n_lanes") - 1.5
+    safe_l = (gap_l > Param("g_lead_safe")) & (rear_l > Param("g_rear_safe"))
+    safe_r = (gap_r > Param("g_lead_safe")) & (rear_r > Param("g_rear_safe"))
+    want_l = valid_l & safe_l & (u_l > u_s + Param("lc_threshold"))
+    want_r = valid_r & safe_r & (u_r > u_s + Param("lc_threshold"))
+    go = rand_uniform() < Param("p_lc")
+    dl = where(
+        want_l & (~want_r | (u_l >= u_r)) & go,
+        -1.0,
+        where(want_r & go, 1.0, 0.0),
+    )
+    T.update("lane", clip(lane + dl, 0.0, Param("n_lanes") - 1.0))
+    T.update("v", maximum(0.0, v_new))
+    # positions advance with the tick-t velocity (state-effect semantics)
+    T.update("x", Self("x") + v * Param("dt"))
+    return T
+
+
+def make_traffic_sim(length: float = 4000.0, n_lanes: int = 4, **kw) -> Simulation:
+    T = make_traffic_class(length=length, n_lanes=n_lanes, **kw)
+    return Simulation.build(
+        T, world_lo=(0.0, 0.0), world_hi=(length, float(n_lanes - 1))
+    )
+
+
+def init_traffic(
+    sim: Simulation,
+    n: int,
+    capacity: int,
+    seed: int = 0,
+    length: float | None = None,
+    n_lanes: int = 4,
+    v0: float = 20.0,
+):
+    rs = np.random.RandomState(seed)
+    length = length if length is not None else sim.world_hi[0]
+    x = rs.uniform(0, length, n).astype(np.float32)
+    lane = rs.randint(0, n_lanes, n).astype(np.float32)
+    v = rs.uniform(0.5 * v0, 1.2 * v0, n).astype(np.float32)
+    return sim.init_population(capacity, oid=np.arange(n), x=x, lane=lane, v=v)

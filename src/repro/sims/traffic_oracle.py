@@ -1,0 +1,154 @@
+"""Hand-coded traffic simulator — the validation baseline for Table 2.
+
+The paper validates its BRASIL reimplementation of MITSIM's lane-changing
+and acceleration models against MITSIM itself by comparing aggregate lane
+statistics (change frequency, average density, average velocity) with
+RMSPE.  MITSIM is not available here, so this module plays its role: an
+*independent, hand-written* numpy implementation of the same driver models
+(same equations as sims/traffic.py, different codebase, different RNG
+stream).  benchmarks/table2_validation.py compares the two exactly the way
+App. C does.
+
+It is also the "hand-coded simulation" reference for the single-node
+performance comparison (Fig. 3): a tight numpy loop with its own nearest-
+neighbor search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+BIG = 1.0e30
+
+
+@dataclasses.dataclass
+class OracleParams:
+    length: float = 4000.0
+    n_lanes: int = 4
+    lookahead: float = 200.0
+    vmax: float = 30.0
+    dt: float = 1.0
+    a_acc: float = 2.0
+    b_dec: float = 4.0
+    k_follow: float = 0.6
+    h_upper: float = 2.0
+    h_lower: float = 0.6
+    g_min: float = 4.0
+    g_lead_safe: float = 10.0
+    g_rear_safe: float = 8.0
+    w_v: float = 1.0
+    w_g: float = 0.05
+    lc_threshold: float = 2.0
+    p_lc: float = 0.6
+    right_reluctance: float = 10.0
+
+
+def _wdelta(d, length):
+    return d - length * np.floor(d / length + 0.5)
+
+
+class TrafficOracle:
+    def __init__(self, params: OracleParams, seed: int = 1234):
+        self.p = params
+        self.rs = np.random.RandomState(seed)
+
+    def step(self, x, lane, v):
+        """One tick; returns (x', lane', v', lane_changes mask)."""
+        p = self.p
+        n = len(x)
+        # pairwise wrapped deltas within lookahead
+        d = _wdelta(x[None, :] - x[:, None], p.length)  # d[i, j] = j relative to i
+        dlane = lane[None, :] - lane[:, None]
+        np.fill_diagonal(d, np.inf)
+        vis = np.abs(d) <= p.lookahead
+
+        def lead_gap(lane_sel):
+            mask = vis & lane_sel & (d > 0)
+            dd = np.where(mask, d, BIG)
+            j = np.argmin(dd, axis=1)
+            gap = dd[np.arange(n), j]
+            vlead = np.where(gap < BIG / 2, v[j], 0.0)
+            return gap, vlead
+
+        def rear_gap(lane_sel):
+            mask = vis & lane_sel & (d < 0)
+            dd = np.where(mask, -d, BIG)
+            j = np.argmin(dd, axis=1)
+            return dd[np.arange(n), j]
+
+        same = np.abs(dlane) < 0.5
+        left = (dlane < -0.5) & (dlane > -1.5)
+        right = (dlane > 0.5) & (dlane < 1.5)
+
+        gap_s, vlead_s = lead_gap(same)
+        gap_l, _ = lead_gap(left)
+        gap_r, _ = lead_gap(right)
+        rear_l = rear_gap(left)
+        rear_r = rear_gap(right)
+
+        def lane_avgv(lane_sel):
+            mask = vis & lane_sel
+            cnt = mask.sum(axis=1)
+            sumv = (mask * v[None, :]).sum(axis=1)
+            return np.where(cnt > 0, sumv / np.maximum(cnt, 1), p.vmax)
+
+        avgv_s = lane_avgv(same)
+        avgv_l = lane_avgv(left)
+        avgv_r = lane_avgv(right)
+
+        # car following
+        none_ahead = gap_s > BIG / 2
+        free = none_ahead | (gap_s > p.g_min + v * p.h_upper)
+        emergency = (~none_ahead) & (gap_s < p.g_min + v * p.h_lower)
+        v_free = np.minimum(p.vmax, v + p.a_acc * p.dt)
+        v_follow = v + p.k_follow * (vlead_s - v) * p.dt
+        v_emerg = np.maximum(0.0, np.minimum(vlead_s, v - p.b_dec * p.dt))
+        v_new = np.where(free, v_free, np.where(emergency, v_emerg, v_follow))
+        v_new = np.maximum(0.0, v_new)
+
+        # lane selection
+        cap = p.lookahead
+        u_s = p.w_v * avgv_s + p.w_g * np.minimum(gap_s, cap)
+        u_l = p.w_v * avgv_l + p.w_g * np.minimum(gap_l, cap)
+        u_r = (
+            p.w_v * avgv_r
+            + p.w_g * np.minimum(gap_r, cap)
+            - np.where(lane + 1 > p.n_lanes - 1.5, p.right_reluctance, 0.0)
+        )
+        valid_l = lane > 0.5
+        valid_r = lane < p.n_lanes - 1.5
+        safe_l = (gap_l > p.g_lead_safe) & (rear_l > p.g_rear_safe)
+        safe_r = (gap_r > p.g_lead_safe) & (rear_r > p.g_rear_safe)
+        want_l = valid_l & safe_l & (u_l > u_s + p.lc_threshold)
+        want_r = valid_r & safe_r & (u_r > u_s + p.lc_threshold)
+        go = self.rs.uniform(size=n) < p.p_lc
+        dl = np.where(
+            want_l & (~want_r | (u_l >= u_r)) & go,
+            -1.0,
+            np.where(want_r & go, 1.0, 0.0),
+        )
+        lane_new = np.clip(lane + dl, 0, p.n_lanes - 1)
+        x_new = np.mod(x + v * p.dt, p.length)
+        return x_new, lane_new, v_new, dl != 0
+
+
+def lane_statistics(x, lane, v, changes, n_lanes: int, length: float):
+    """Per-lane (density, mean velocity, change count) for one tick."""
+    out = []
+    for ln in range(n_lanes):
+        m = np.abs(lane - ln) < 0.5
+        dens = m.sum() / length * 1000.0  # vehicles per km
+        vel = v[m].mean() if m.any() else 0.0
+        chg = np.sum(changes & m)
+        out.append((dens, vel, chg))
+    return np.asarray(out)  # [n_lanes, 3]
+
+
+def rmspe(a: np.ndarray, b: np.ndarray) -> float:
+    """Relative mean square percentage error (App. C's goodness-of-fit)."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    denom = np.where(np.abs(a) > 1e-9, a, 1e-9)
+    return float(np.sqrt(np.mean(((a - b) / denom) ** 2)))

@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .train_step import TrainState, make_train_step, init_train_state  # noqa: F401

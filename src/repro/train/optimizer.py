@@ -1,0 +1,93 @@
+"""Hand-rolled AdamW with linear-warmup cosine schedule and global-norm
+gradient clipping.  Optimizer moments are fp32 regardless of param dtype
+(mixed-precision convention: bf16 params for compute, fp32 master copy +
+moments in the optimizer state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_init(params: Any) -> dict:
+    """Optimizer state: fp32 master copy + fp32 moments.
+
+    ``jnp.array(..., copy=True)`` (not astype): with f32 params astype is a
+    no-op and master would alias params — donating the TrainState then
+    donates the same buffer twice.
+    """
+    master = jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
+    return {
+        "master": master,
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, opt_state: dict, param_dtype):
+    """Returns (new compute params, new opt state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        p_new = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+        return m_new, v_new, p_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda p: p.astype(param_dtype), new_master)
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

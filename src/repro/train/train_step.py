@@ -1,0 +1,155 @@
+"""Training step: CE loss → grads → AdamW, with optional microbatch
+gradient accumulation and (multi-pod) int8 compressed gradient reduction.
+
+The step is a pure function of (state, batch) so the launcher can jit it
+with explicit in/out shardings and donate the state (launch/dryrun.py,
+launch/train.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.zoo import Model
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1           # gradient accumulation steps
+    grad_compression: bool = False  # int8 + error feedback across 'pod'
+    pod_axis: str | None = None     # set when running under shard_map
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any        # compute-dtype params
+    opt: dict          # fp32 master + moments + step
+    err: Any | None    # error-feedback residual (grad compression)
+
+
+def init_train_state(model: Model, key: Array, train_cfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    opt = adamw_init(params)
+    err = None
+    if train_cfg.grad_compression:
+        from .compression import init_error_feedback
+
+        err = init_error_feedback(params)
+    return TrainState(params=params, opt=opt, err=err)
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def chunked_ce(hidden: Array, head: Array, labels: Array,
+               n_chunks: int = 8, constrain=None) -> Array:
+    """CE over sequence chunks: the [B, S, V] logits tensor is never
+    materialized (only [B, S/n, V] per chunk, rematerialized in backward).
+    Essential at vocab ≥ 50k × seq 4k scales.
+
+    ``constrain(x, dims)`` applies a batch-sharding constraint (dims maps
+    array dims → 'batch'/None).  GSPMD does NOT propagate the batch
+    sharding into the scan+checkpoint while-loop on its own — it replicates
+    the per-chunk logits (measured: 27 GB/device all-gathers on whisper);
+    the explicit constraints pin it.  Measured A/B at whisper dims on 256
+    devices: scan+ckpt+constraints 6.6 GiB temp vs 51 GiB plain CE.
+    """
+    b, s, d = hidden.shape
+    if s % n_chunks:
+        return cross_entropy((hidden @ head).astype(jnp.float32), labels)
+    chunk = s // n_chunks
+    if constrain is None:
+        constrain = lambda x, dims: x
+
+    hs = jnp.moveaxis(hidden.reshape(b, n_chunks, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+    hs = constrain(hs, (None, "batch", None, None))
+    ls = constrain(ls, (None, "batch", None))
+
+    @jax.checkpoint
+    def one(carry, inp):
+        h, lab = inp  # [B, chunk, D], [B, chunk]
+        logits = (h @ head).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, None))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        return carry - ll.sum(), None
+
+    total, _ = jax.lax.scan(one, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)
+
+
+def make_constrainer(mesh, batch_axes):
+    """dims-role → with_sharding_constraint helper for the loss."""
+    if mesh is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def constrain(x, dims):
+        spec = PartitionSpec(*[batch_axes if r == "batch" else None for r in dims])
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def make_loss_fn(model: Model, mesh=None, batch_axes=None) -> Callable:
+    constrain = make_constrainer(mesh, batch_axes)
+
+    def loss_fn(params, batch):
+        hidden = model.forward_hidden(params, batch)
+        head = model.head_matrix(params)
+        return chunked_ce(hidden, head, batch["labels"], constrain=constrain)
+
+    return loss_fn
+
+
+def make_train_step(model: Model, train_cfg: TrainConfig, mesh=None,
+                    batch_axes=None) -> Callable:
+    loss_fn = make_loss_fn(model, mesh=mesh, batch_axes=batch_axes)
+    param_dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[model.cfg.dtype]
+
+    def grads_of(params, batch):
+        if train_cfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(carry, mb):
+            loss_acc, g_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + l, jax.tree.map(jnp.add, g_acc, g)), None
+
+        n = train_cfg.microbatches
+        mbs = jax.tree.map(
+            lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch
+        )
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), mbs)
+        inv = 1.0 / n
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        loss, grads = grads_of(state.params, batch)
+        err = state.err
+        if train_cfg.grad_compression and train_cfg.pod_axis is not None:
+            from .compression import compressed_psum
+
+            grads, err = compressed_psum(grads, train_cfg.pod_axis, err)
+        params, opt, metrics = adamw_update(
+            train_cfg.optimizer, grads, state.opt, param_dtype
+        )
+        metrics["loss"] = loss
+        return TrainState(params=params, opt=opt, err=err), metrics
+
+    return train_step

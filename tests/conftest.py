@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device.  Multi-device tests spawn subprocesses with
+# --xla_force_host_platform_device_count set (tests/helpers/).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

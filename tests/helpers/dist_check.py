@@ -1,0 +1,88 @@
+"""Subprocess helper: verify distributed == single-device on N fake devices.
+
+Run as:  XLA_FLAGS=--xla_force_host_platform_device_count=<P> \
+         python tests/helpers/dist_check.py <scenario> <P>
+Prints JSON {"ok": bool, ...} on the last line.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import numpy as np  # noqa: E402
+
+
+def by_oid(st):
+    alive = np.asarray(st.alive)
+    oid = np.asarray(st.oid)[alive]
+    out = {k: np.asarray(v)[alive] for k, v in st.fields.items()}
+    order = np.argsort(oid)
+    return oid[order], {k: v[order] for k, v in out.items()}
+
+
+def compare(ref, got, rtol=3e-4, atol=3e-5):
+    oid_r, f_r = by_oid(ref)
+    oid_d, f_d = by_oid(got)
+    if not np.array_equal(oid_r, oid_d):
+        return False, f"population mismatch {len(oid_r)} vs {len(oid_d)}"
+    for k in f_r:
+        if not np.allclose(f_r[k], f_d[k], rtol=rtol, atol=atol):
+            err = np.abs(f_r[k] - f_d[k]).max()
+            return False, f"field {k} max err {err}"
+    return True, ""
+
+
+def main():
+    scenario = sys.argv[1]
+    import jax
+
+    from repro.core import Engine
+    from repro.core.distribute import DistEngine
+
+    n_dev = jax.device_count()
+    ticks = 12
+
+    if scenario in ("fish_local", "fish_nonlocal", "fish_tp"):
+        from tests_fixtures import fig2_fish_sim
+
+        sim, state, n = fig2_fish_sim(
+            nonlocal_=scenario != "fish_local", world=(40.0, 10.0), n=400
+        )
+    elif scenario == "traffic_periodic":
+        from repro.sims.traffic import init_traffic, make_traffic_sim
+
+        sim = make_traffic_sim(length=4000.0)
+        n = 300
+        state = init_traffic(sim, n=n, capacity=400, seed=0)
+    elif scenario == "predator":
+        from repro.sims.predator import init_population, make_predator_sim
+
+        sim = make_predator_sim(world=(30.0, 10.0))
+        n = 300
+        state = init_population(sim, n_prey=270, n_pred=30, capacity=400, seed=0)
+    else:
+        raise SystemExit(f"unknown scenario {scenario}")
+
+    eng = Engine(sim, n_agents_hint=n, index="grid")
+    ref, _ = eng.run(state, n_ticks=ticks, seed=0)
+
+    deng = DistEngine(
+        sim, n_agents_hint=n, two_pass=True if scenario == "fish_tp" else None
+    )
+    bounds = deng.uniform_bounds()
+    dstate = deng.distribute(state, bounds)
+    dstate, stats = deng.run_epoch(dstate, bounds, n_ticks=ticks, seed=0)
+    got = deng.gather(dstate)
+
+    ok, msg = compare(ref, got)
+    overflows = {
+        k: int(np.asarray(v).sum()) for k, v in stats.items() if "overflow" in k
+    }
+    ok = ok and all(v == 0 for v in overflows.values())
+    print(json.dumps({"ok": ok, "msg": msg, "n_dev": n_dev, "overflows": overflows}))
+
+
+if __name__ == "__main__":
+    main()

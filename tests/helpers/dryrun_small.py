@@ -1,0 +1,63 @@
+"""Subprocess helper: the dry-run machinery on a small mesh (8 fake
+devices, reduced-but-structured configs) — lower+compile+analyze every
+family and shape kind, including the multi-pod 'pod' axis."""
+
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import numpy as np  # noqa: E402
+
+
+def main():
+    import jax
+
+    from repro.configs.base import SHAPES, ShapeSpec, get_arch, reduced
+    from repro.launch.dryrun_lib import run_cell
+    from repro.launch.mesh import make_test_mesh
+
+    # structured-but-small configs: real enough to exercise every path
+    def small(name):
+        cfg = get_arch(name)
+        return reduced(
+            cfg, n_layers=4, d_model=128, n_heads=8, n_kv_heads=4, d_head=16,
+            d_ff=256, vocab=512, scan_layers=True, remat=True,
+            dtype="bfloat16",
+        )
+
+    # monkey-patch the registry view used by run_cell
+    import repro.configs.base as base
+
+    shapes = {
+        "train_4k": ShapeSpec("train_4k", 256, 16, "train"),
+        "prefill_32k": ShapeSpec("prefill_32k", 512, 8, "prefill"),
+        "decode_32k": ShapeSpec("decode_32k", 512, 8, "decode"),
+    }
+    base.SHAPES.update(shapes)
+
+    results = {}
+    archs = ["granite-8b", "mixtral-8x22b", "zamba2-1.2b", "rwkv6-7b", "whisper-base"]
+    meshes = {
+        "single": make_test_mesh((2, 2), ("data", "model")),
+        "multi": make_test_mesh((2, 2, 2), ("pod", "data", "model")),
+    }
+    for mesh_name, mesh in meshes.items():
+        for arch in archs:
+            cfg = small(arch)
+            object.__setattr__(cfg, "name", arch)  # keep registry key
+            base._REGISTRY[arch] = cfg
+            for shape_name in shapes:
+                r = run_cell(arch, shape_name, mesh, mesh_name, analysis=False)
+                results[f"{arch}|{shape_name}|{mesh_name}"] = (
+                    "ok" if r.ok else f"FAIL: {r.reason[:200]}"
+                )
+    n_fail = sum(1 for v in results.values() if v != "ok")
+    print(json.dumps({"ok": n_fail == 0, "n": len(results),
+                      "fails": {k: v for k, v in results.items() if v != "ok"}}))
+
+
+if __name__ == "__main__":
+    main()

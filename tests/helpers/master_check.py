@@ -1,0 +1,157 @@
+"""Subprocess helper for master-level features.
+
+Scenarios:
+  checkpoint_resume <P>  — run 4 epochs w/ checkpoints; "crash"; restore at
+                           epoch 2 and re-run; final states must match.
+  elastic <P>            — checkpoint on P devices is restored and continued
+                           on P/2 devices (mesh-agnostic snapshot).
+  loadbalance <P>        — drifting fish school: with LB the per-slab
+                           imbalance must stay below the no-LB run.
+Prints JSON on the last line.
+"""
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import numpy as np  # noqa: E402
+
+
+def by_oid(st):
+    alive = np.asarray(st.alive)
+    oid = np.asarray(st.oid)[alive]
+    out = {k: np.asarray(v)[alive] for k, v in st.fields.items()}
+    order = np.argsort(oid)
+    return oid[order], {k: v[order] for k, v in out.items()}
+
+
+def states_equal(a, b, rtol=3e-4, atol=3e-5):
+    oa, fa = by_oid(a)
+    ob, fb = by_oid(b)
+    if not np.array_equal(oa, ob):
+        return False
+    return all(np.allclose(fa[k], fb[k], rtol=rtol, atol=atol) for k in fa)
+
+
+def build(n=400):
+    from tests_fixtures import fig2_fish_sim
+
+    return fig2_fish_sim(nonlocal_=True, world=(40.0, 10.0), n=n)
+
+
+def main():
+    scenario = sys.argv[1]
+
+    from repro.core.distribute import DistEngine
+    from repro.core.master import Master, MasterConfig
+
+    tmp = tempfile.mkdtemp(prefix="brace_ckpt_")
+    try:
+        if scenario == "checkpoint_resume":
+            sim, state0, n = build()
+            eng = DistEngine(sim, n_agents_hint=n)
+            cfg = MasterConfig(
+                ticks_per_epoch=5, checkpoint_every=1, checkpoint_dir=tmp,
+                load_balance=False, seed=0,
+            )
+            m1 = Master(eng, cfg)
+            st = m1.start(state0)
+            st, _ = m1.run(st, n_epochs=4)
+            final_ref = eng.gather(st)
+
+            # "crash": new master, restore from the epoch-2 checkpoint
+            # (explicit step — the GC may have dropped older ones),
+            # re-execute the remaining epochs
+            step2 = 2 * cfg.ticks_per_epoch
+            m2 = Master(DistEngine(sim, n_agents_hint=n), cfg)
+            st2 = m2.restore_from_checkpoint(step2)
+            assert m2.epoch == 2, m2.epoch
+            st2, _ = m2.run(st2, n_epochs=2)
+            final_re = m2.engine.gather(st2)
+            ok = states_equal(final_ref, final_re)
+            print(json.dumps({"ok": bool(ok), "restored_step": step2}))
+
+        elif scenario == "elastic":
+            import jax
+
+            sim, state0, n = build()
+            all_devs = jax.devices()
+            p_full = len(all_devs)
+            mesh_full = jax.make_mesh(
+                (p_full,), ("space",),
+                axis_types=(jax.sharding.AxisType.Auto,),
+            )
+            eng = DistEngine(sim, n_agents_hint=n, mesh=mesh_full)
+            cfg = MasterConfig(
+                ticks_per_epoch=5, checkpoint_every=1, checkpoint_dir=tmp,
+                load_balance=False, seed=0,
+            )
+            m1 = Master(eng, cfg)
+            st = m1.start(state0)
+            st, _ = m1.run(st, n_epochs=2)
+
+            # reference: continue on the full mesh
+            st_ref, _ = m1.run(st, n_epochs=2)
+            ref = eng.gather(st_ref)
+
+            # elastic: restore the same checkpoint on HALF the devices
+            mesh_half = jax.make_mesh(
+                (p_full // 2,), ("space",),
+                axis_types=(jax.sharding.AxisType.Auto,),
+                devices=all_devs[: p_full // 2],
+            )
+            eng2 = DistEngine(sim, n_agents_hint=n, mesh=mesh_half)
+            m2 = Master(eng2, cfg)
+            st2 = m2.restore_from_checkpoint(2 * cfg.ticks_per_epoch)
+            assert m2.epoch == 2
+            st2, _ = m2.run(st2, n_epochs=2)
+            got = eng2.gather(st2)
+            ok = states_equal(ref, got)
+            print(json.dumps({"ok": bool(ok), "p_full": p_full}))
+
+        elif scenario == "loadbalance":
+            from repro.sims.fish import init_school, make_fish_sim
+
+            n = 600
+            sim = make_fish_sim(world=(60.0, 12.0))
+            state0 = init_school(
+                sim, n=n, capacity=2 * n, seed=0, informed_fraction=0.2
+            )
+
+            def run(lb: bool):
+                # fish school clusters way past uniform density → explicit
+                # cell capacity (overflow is checked by the master)
+                eng = DistEngine(
+                    sim, n_agents_hint=n, capacity_factor=8.0, cell_capacity=192
+                )
+                m = Master(
+                    eng,
+                    MasterConfig(
+                        ticks_per_epoch=20, checkpoint_every=0,
+                        load_balance=lb, lb_imbalance_threshold=1.15, seed=0,
+                    ),
+                )
+                st = m.start(state0)
+                imb = []
+                for _ in range(6):
+                    st, rep = m.run_epoch(st)
+                    imb.append(rep.imbalance)
+                return imb
+
+            imb_lb = run(True)
+            imb_no = run(False)
+            # with LB, late-epoch imbalance must be clearly smaller
+            ok = np.mean(imb_lb[-3:]) < np.mean(imb_no[-3:])
+            print(json.dumps({"ok": bool(ok), "lb": imb_lb, "no_lb": imb_no}))
+        else:
+            raise SystemExit(f"unknown scenario {scenario}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

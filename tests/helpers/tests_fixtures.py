@@ -1,0 +1,39 @@
+"""Shared fixtures for subprocess helpers."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.brasil import AgentClass, Eff, Other, Self, abs_  # noqa: E402
+from repro.core import Simulation, uniform_population  # noqa: E402
+
+
+def fig2_fish_sim(nonlocal_: bool = True, world=(40.0, 10.0), n: int = 400):
+    """Deterministic Fig. 2 fish; non-local or pre-inverted local variant."""
+    F = AgentClass("Fish", position=("x", "y"), visibility=(1.0, 1.0))
+    F.state("x", reach=0.1).state("y", reach=0.1).state("vx").state("vy")
+    F.effect("avoidx", "sum").effect("avoidy", "sum").effect("count", "sum")
+    eps = 1e-1
+    tgt = "other" if nonlocal_ else "self"
+    # the symmetric (|Δ|) kernel is identical in scatter and gather form
+    F.emit(tgt, "avoidx", (Other("x") - Self("x")) / (abs_(Self("x") - Other("x")) + eps))
+    F.emit(tgt, "avoidy", (Other("y") - Self("y")) / (abs_(Self("y") - Other("y")) + eps))
+    F.emit(tgt, "count", 1.0)
+    F.update("x", Self("x") + Self("vx"))
+    F.update("y", Self("y") + Self("vy"))
+    F.update("vx", Self("vx") * 0.9 + Eff("avoidx") / (Eff("count") + 1.0) * 0.02)
+    F.update("vy", Self("vy") * 0.9 + Eff("avoidy") / (Eff("count") + 1.0) * 0.02)
+
+    sim = Simulation.build(F, world_lo=(0.0, 0.0), world_hi=world)
+    rs = np.random.RandomState(0)
+    state = uniform_population(
+        sim, n, capacity=int(n * 1.3), seed=3,
+        extra={
+            "vx": rs.uniform(-0.05, 0.05, n).astype(np.float32),
+            "vy": rs.uniform(-0.05, 0.05, n).astype(np.float32),
+        },
+    )
+    return sim, state, n

@@ -1,0 +1,156 @@
+"""Attention reference properties: streaming-softmax == naive, windowed ==
+masked-naive, decode == row of full attention; RoPE/GQA invariants;
+mamba2 chunked == sequential recurrence; rwkv6 chunked == sequential."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import attention as A
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    g = h // k.shape[2]
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    sc = jnp.einsum("bshd,bthd->bhst", q, kk).astype(jnp.float32) * d**-0.5
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, vv)
+
+
+@given(
+    seed=st.integers(0, 100),
+    s=st.sampled_from([16, 64, 128]),
+    h=st.sampled_from([4]),
+    kv=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_matches_naive_causal(seed, s, h, kv):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    b, d = 2, 8
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    out = A.flash_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
+    ref = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 32, 96])
+def test_windowed_matches_naive(window):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    b, s, h, kv, d = 2, 128, 4, 2, 8
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    out = A.flash_attention(q, k, v, causal=True, window=window, q_chunk=32)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_matches_forward_row():
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    b, s, h, kv, d = 2, 24, 4, 2, 8
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    full = naive_attention(q, k, v, causal=True)
+    for pos in (0, 7, s - 1):
+        out = A.decode_attention(q[:, pos:pos + 1], k, v, jnp.asarray(pos))
+        np.testing.assert_allclose(
+            np.asarray(out[:, 0]), np.asarray(full[:, pos]), atol=2e-5
+        )
+
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, 16, 2, 8), jnp.float32)
+    r = A.apply_rope(x, jnp.arange(16), 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 8))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 8))
+    def dot_at(i, j):
+        qi = A.apply_rope(q, jnp.asarray([i]), 10000.0)
+        kj = A.apply_rope(k, jnp.asarray([j]), 10000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# recurrent blocks vs sequential oracles
+# ---------------------------------------------------------------------------
+
+def test_mamba2_chunked_matches_sequential():
+    from repro.models import mamba2 as M
+
+    key = jax.random.PRNGKey(0)
+    b, s, h, p, n = 2, 64, 2, 4, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_ = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    B = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, n), jnp.float32)
+
+    got = M._ssd_chunked(x, dt, A_, B, C, chunk=16)
+
+    # sequential oracle
+    state = np.zeros((b, h, n, p))
+    ref = np.zeros((b, s, h, p))
+    xn, dtn, Bn, Cn = map(np.asarray, (x, dt, B, C))
+    An = np.asarray(A_)
+    for t in range(s):
+        da = np.exp(dtn[:, t] * An[None, :])  # [b,h]
+        state = state * da[:, :, None, None] + np.einsum(
+            "bn,bh,bhp->bhnp", Bn[:, t], dtn[:, t], xn[:, t]
+        )
+        ref[:, t] = np.einsum("bn,bhnp->bhp", Cn[:, t], state)
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_chunked_matches_sequential():
+    from repro.models import rwkv6 as R
+
+    key = jax.random.PRNGKey(0)
+    b, s, h, kd = 2, 48, 2, 4
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, s, h, kd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, kd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, kd), jnp.float32)
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, kd)) * 0.3)
+    u = np.asarray(jax.random.normal(ks[4], (h, kd)) * 0.1)
+    s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+
+    got, s_fin = R._wkv_chunked(r, k, v, logw, jnp.asarray(u), s0, chunk=16)
+
+    rn, kn, vn, wn = map(np.asarray, (r, k, v, logw))
+    state = np.zeros((b, h, kd, kd))
+    ref = np.zeros((b, s, h, kd))
+    for t in range(s):
+        kv = np.einsum("bhk,bhv->bhkv", kn[:, t], vn[:, t])
+        eff = state + u[None, :, :, None] * kv
+        ref[:, t] = np.einsum("bhk,bhkv->bhv", rn[:, t], eff)
+        state = np.exp(wn[:, t])[:, :, :, None] * state + kv
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), state, rtol=2e-4, atol=2e-4)

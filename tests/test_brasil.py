@@ -1,0 +1,146 @@
+"""BRASIL compiler: state-effect legality, algebraic rewrites, inversion."""
+
+import numpy as np
+import pytest
+
+from repro.brasil import (
+    AgentClass,
+    BrasilError,
+    Eff,
+    Other,
+    Param,
+    Self,
+    abs_,
+    compile_agent,
+    eliminate_dead_effects,
+    fold_program_constants,
+    invert_effects,
+    rand_uniform,
+    where,
+)
+from repro.brasil import ast as A
+
+
+def _simple_class():
+    F = AgentClass("F", position=("x", "y"), visibility=(1.0, 1.0))
+    F.state("x", reach=0.5).state("y", reach=0.5).state("v")
+    F.effect("e", "sum")
+    return F
+
+
+# ---- legality (the paper's read/write restrictions) -------------------------
+
+def test_query_cannot_read_effects():
+    F = _simple_class()
+    F.emit("self", "e", Eff("e") + 1.0)
+    F.update("x", Self("x"))
+    with pytest.raises(BrasilError, match="write-only"):
+        compile_agent(F)
+
+
+def test_query_cannot_use_rand():
+    F = _simple_class()
+    F.emit("self", "e", rand_uniform())
+    F.update("x", Self("x"))
+    with pytest.raises(BrasilError, match="rand"):
+        compile_agent(F)
+
+
+def test_update_cannot_read_other():
+    F = _simple_class()
+    F.emit("self", "e", Other("v"))
+    F.update("x", Other("x"))
+    with pytest.raises(BrasilError, match="own fields"):
+        compile_agent(F)
+
+
+def test_unknown_fields_rejected():
+    F = _simple_class()
+    with pytest.raises(ValueError, match="unknown effect"):
+        F.emit("self", "nope", 1.0)
+    with pytest.raises(ValueError, match="unknown state"):
+        F.update("nope", 1.0)
+
+
+def test_min_by_requires_key():
+    F = _simple_class()
+    F.effect("m", "min_by", payload=["v"])
+    with pytest.raises(ValueError, match="key"):
+        F.emit("self", "m", 1.0)
+
+
+def test_duplicate_declarations_rejected():
+    F = _simple_class()
+    with pytest.raises(ValueError):
+        F.state("x")
+    with pytest.raises(ValueError):
+        F.effect("e")
+    F.update("x", Self("x"))
+    with pytest.raises(ValueError):
+        F.update("x", Self("x"))
+
+
+# ---- optimization rewrites ---------------------------------------------------
+
+def test_constant_folding():
+    F = _simple_class()
+    F.emit("self", "e", (2.0 + 3.0) * Other("v"))
+    F.update("x", Self("x") + (1.0 + 1.0))
+    out = fold_program_constants(F)
+    emit_expr = out.emits[0].value
+    assert isinstance(emit_expr, A.BinOp)
+    assert isinstance(emit_expr.a, A.Const) and emit_expr.a.value == 5.0
+
+
+def test_dead_effect_elimination():
+    F = _simple_class()
+    F.effect("unused", "sum")
+    F.emit("self", "e", Other("v"))
+    F.emit("self", "unused", 1.0)
+    F.update("x", Self("x") + Eff("e"))
+    out = eliminate_dead_effects(F)
+    assert "unused" not in out.effects
+    assert len(out.emits) == 1
+
+
+def test_inversion_swaps_roles_and_target():
+    F = _simple_class()
+    F.emit("other", "e", Self("v") - Other("v"), where=Other("v") > 0.0)
+    F.update("x", Self("x") + Eff("e"))
+    out = invert_effects(F)
+    e = out.emits[0]
+    assert e.target == "self"
+    # value: Self("v") - Other("v") -> Other("v") - Self("v")
+    assert e.value.a.role == A.OTHER and e.value.b.role == A.SELF
+    assert e.where.a.role == A.SELF
+    plan = compile_agent(out)
+    assert plan.has_nonlocal is False
+
+
+def test_inversion_is_involution_on_structure():
+    F = _simple_class()
+    F.emit("other", "e", Self("v"))
+    F.update("x", Self("x") + Eff("e"))
+    twice = invert_effects(invert_effects(F))
+    # double inversion: target self→self (inversion only flips non-local)
+    assert twice.emits[0].target == "self"
+
+
+# ---- misc AST ---------------------------------------------------------------
+
+def test_expression_type_errors():
+    with pytest.raises(TypeError):
+        Self("x") + "nope"
+
+
+def test_where_and_calls_evaluate():
+    env = A.EvalEnv({"x": np.asarray([1.0, -2.0])}, None, None, {})
+    expr = where(Self("x") > 0.0, abs_(Self("x")), 0.0 - Self("x"))
+    out = A.evaluate(expr, env)
+    np.testing.assert_allclose(np.asarray(out), [1.0, 2.0])
+
+
+def test_param_reference():
+    env = A.EvalEnv({"x": np.asarray([1.0])}, None, None, {"k": 3.0})
+    out = A.evaluate(Param("k") * Self("x"), env)
+    np.testing.assert_allclose(np.asarray(out), [3.0])

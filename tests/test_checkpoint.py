@@ -1,0 +1,73 @@
+"""CheckpointManager: atomicity, GC, torn-write fallback (single device)."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.agents import AgentState
+from repro.core.checkpoint import CheckpointManager
+
+
+def _state(n=16, seed=0):
+    rs = np.random.RandomState(seed)
+    return AgentState(
+        alive=jnp.asarray(rs.rand(n) > 0.3),
+        oid=jnp.arange(n, dtype=jnp.int32),
+        fields={
+            "x": jnp.asarray(rs.randn(n).astype(np.float32)),
+            "h": jnp.asarray(rs.randn(n, 2).astype(np.float32)),
+        },
+    )
+
+
+def _assert_equal(a: AgentState, b: AgentState):
+    np.testing.assert_array_equal(np.asarray(a.alive), np.asarray(b.alive))
+    np.testing.assert_array_equal(np.asarray(a.oid), np.asarray(b.oid))
+    for k in a.fields:
+        np.testing.assert_array_equal(np.asarray(a.fields[k]), np.asarray(b.fields[k]))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    st = _state()
+    mgr.save(10, st, meta={"tick": 10, "epoch": 1, "bounds": [0.0, 1.0]})
+    got, meta = mgr.restore()
+    _assert_equal(st, got)
+    assert meta["tick"] == 10 and meta["epoch"] == 1
+
+
+def test_async_write_and_latest_selection(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    for step in (5, 10, 15):
+        mgr.save(step, _state(seed=step), meta={"tick": step, "epoch": step // 5})
+    mgr.wait()
+    got, meta = mgr.restore()
+    assert meta["tick"] == 15
+    _assert_equal(_state(seed=15), got)
+
+
+def test_gc_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for step in range(5):
+        mgr.save(step, _state(seed=step), meta={"tick": step, "epoch": step})
+    assert mgr.list_steps() == [3, 4]
+
+
+def test_torn_write_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, _state(seed=1), meta={"tick": 1, "epoch": 1})
+    mgr.save(2, _state(seed=2), meta={"tick": 2, "epoch": 2})
+    # corrupt the newest snapshot (torn write)
+    with open(os.path.join(str(tmp_path), "ckpt_0000000002.npz"), "wb") as f:
+        f.write(b"garbage")
+    got, meta = mgr.restore()
+    assert meta["tick"] == 1
+    _assert_equal(_state(seed=1), got)
+
+
+def test_restore_empty_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore()

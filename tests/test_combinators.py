@@ -1,0 +1,114 @@
+"""Combinator laws: the state-effect pattern requires every effect
+combinator to be decomposable and order-independent (paper §2.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import combinators as C
+
+finite = st.floats(
+    min_value=-1e6,
+    max_value=1e6,
+    allow_nan=False,
+    allow_infinity=False,
+    allow_subnormal=False,  # XLA CPU flushes denormals to zero
+    width=32,
+)
+
+
+@pytest.mark.parametrize("name", ["sum", "min", "max"])
+@given(a=finite, b=finite, c=finite)
+@settings(max_examples=50, deadline=None)
+def test_combine_commutative_associative(name, a, b, c):
+    comb = C.get(name)
+    a, b, c = (jnp.float32(v) for v in (a, b, c))
+    ab = comb.combine(a, b)
+    ba = comb.combine(b, a)
+    np.testing.assert_allclose(np.asarray(ab), np.asarray(ba), rtol=1e-6)
+    left = comb.combine(comb.combine(a, b), c)
+    right = comb.combine(a, comb.combine(b, c))
+    if name == "sum":
+        np.testing.assert_allclose(np.asarray(left), np.asarray(right), rtol=1e-4, atol=1e-2)
+    else:
+        np.testing.assert_allclose(np.asarray(left), np.asarray(right), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["sum", "min", "max"])
+@given(a=finite)
+@settings(max_examples=25, deadline=None)
+def test_identity_element(name, a):
+    comb = C.get(name)
+    ident = comb.identity((), jnp.float32)
+    out = comb.combine(jnp.float32(a), ident)
+    np.testing.assert_allclose(np.asarray(out), np.float32(a), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["sum", "min", "max"])
+def test_reduce_matches_pairwise_combine(name):
+    comb = C.get(name)
+    rs = np.random.RandomState(0)
+    contrib = jnp.asarray(rs.randn(4, 7).astype(np.float32))
+    mask = jnp.asarray(rs.rand(4, 7) > 0.3)
+    red = comb.reduce(contrib, mask, axis=1)
+    for i in range(4):
+        acc = comb.identity((), jnp.float32)
+        for j in range(7):
+            if bool(mask[i, j]):
+                acc = comb.combine(acc, contrib[i, j])
+        np.testing.assert_allclose(np.asarray(red[i]), np.asarray(acc), rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["sum", "min", "max"])
+def test_scatter_matches_serial(name):
+    comb = C.get(name)
+    rs = np.random.RandomState(1)
+    n, k = 5, 12
+    target = np.asarray(comb.identity((n,), jnp.float32))
+    idx = jnp.asarray(rs.randint(0, n, (3, k)).astype(np.int32))
+    contrib = jnp.asarray(rs.randn(3, k).astype(np.float32))
+    mask = jnp.asarray(rs.rand(3, k) > 0.4)
+    out = comb.scatter(jnp.asarray(target), idx, contrib, mask)
+    ref = target.copy()
+    for i in range(3):
+        for j in range(k):
+            if bool(mask[i, j]):
+                t = int(idx[i, j])
+                ref[t] = np.asarray(
+                    comb.combine(jnp.float32(ref[t]), contrib[i, j])
+                )
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_min_by_selects_argmin_record():
+    comb = C.MIN_BY
+    key = jnp.asarray([[3.0, 1.0, 2.0], [5.0, 9.0, 7.0]])
+    pay = jnp.asarray([[30.0, 10.0, 20.0], [50.0, 90.0, 70.0]])
+    mask = jnp.asarray([[True, True, True], [True, False, True]])
+    red = comb.reduce({"key": key, "v": pay}, mask, axis=1)
+    np.testing.assert_allclose(np.asarray(red["key"]), [1.0, 5.0])
+    np.testing.assert_allclose(np.asarray(red["v"]), [10.0, 50.0])
+
+
+def test_min_by_empty_returns_identity_key():
+    comb = C.MIN_BY
+    key = jnp.asarray([[3.0, 1.0]])
+    pay = jnp.asarray([[30.0, 10.0]])
+    mask = jnp.zeros((1, 2), bool)
+    red = comb.reduce({"key": key, "v": pay}, mask, axis=1)
+    assert float(red["key"][0]) > 1e30
+
+
+def test_max_by_combine_keeps_larger_key():
+    comb = C.MAX_BY
+    a = {"key": jnp.float32(2.0), "v": jnp.float32(20.0)}
+    b = {"key": jnp.float32(5.0), "v": jnp.float32(50.0)}
+    out = comb.combine(a, b)
+    assert float(out["key"]) == 5.0 and float(out["v"]) == 50.0
+
+
+def test_argopt_scatter_raises():
+    with pytest.raises(NotImplementedError):
+        C.MIN_BY.scatter(None, None, None, None)

@@ -1,0 +1,46 @@
+"""Distributed runtime == single-device oracle, via subprocesses with fake
+device counts (the main conftest deliberately keeps 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
+
+
+def run_helper(script: str, args: list[str], n_dev: int, timeout=600):
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+        PYTHONPATH=HELPERS,
+    )
+    out = subprocess.run(
+        [sys.executable, os.path.join(HELPERS, script), *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, f"helper failed:\n{out.stdout}\n{out.stderr}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize(
+    "scenario,n_dev",
+    [
+        ("fish_local", 4),       # local effects: single reduce pass
+        ("fish_nonlocal", 4),    # non-local: map-reduce-reduce
+        ("fish_nonlocal", 8),
+        ("fish_tp", 4),          # forced two-pass on a local program
+        ("traffic_periodic", 4), # periodic ring (circular road)
+        ("predator", 4),         # deaths + min_by under distribution
+    ],
+)
+def test_distributed_matches_single_device(scenario, n_dev):
+    res = run_helper("dist_check.py", [scenario, str(n_dev)], n_dev)
+    assert res["ok"], res
+    assert res["n_dev"] == n_dev
+    assert all(v == 0 for v in res["overflows"].values()), res

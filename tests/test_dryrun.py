@@ -1,0 +1,102 @@
+"""Dry-run machinery at CI scale: every family × shape-kind × both mesh
+topologies lowers, compiles and analyzes on 8 fake devices; plus unit
+tests for the HLO collective parser and sharding rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_distribute import run_helper
+
+
+def test_dryrun_all_families_small_meshes():
+    res = run_helper("dryrun_small.py", [], 8, timeout=1500)
+    assert res["ok"], res["fails"]
+    assert res["n"] == 30  # 5 archs × 3 shapes × 2 meshes
+
+
+def test_collective_parser():
+    from repro.dist.hlo_analysis import collective_bytes
+
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[16]{0} all-reduce(%y), to_apply=%add
+  %rs = (f32[4]{0}, f32[4]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u32[2]{0} collective-permute(%c), source_target_pairs={{0,1}}
+  %notacoll = f32[999]{0} add(%p, %q)
+  %ag2 = bf16[4,4]{1,0} all-gather-start(%z)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2 + 4 * 4 * 2
+    assert out["all-reduce"] == 16 * 4
+    assert out["reduce-scatter"] == 4 * 4 + 4 * 4
+    assert out["collective-permute"] == 2 * 4
+    assert out["all-to-all"] == 0
+
+
+def test_roofline_terms_and_dominance():
+    from repro.dist.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS, Roofline
+
+    r = Roofline(
+        flops_per_device=197e12,      # exactly 1 s of compute
+        bytes_per_device=819e9 / 2,   # 0.5 s of HBM
+        coll_bytes_per_device=50e9 / 4,  # 0.25 s of ICI
+        coll_breakdown={}, n_devices=256,
+    )
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.t_collective == pytest.approx(0.25)
+    assert r.dominant == "compute"
+    assert r.t_total_overlap == pytest.approx(1.0)
+
+
+def test_param_sharding_rules_divisibility_guard():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import MeshAxes, param_pspec
+
+    class FakeMesh:  # param_pspec only reads mesh.shape sizes
+        shape = {"data": 2, "model": 2}
+
+    mesh = FakeMesh()
+    axes = MeshAxes(fsdp=("data",), tensor="model", batch=("data",))
+
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+            self.ndim = len(shape)
+
+    path = (jax.tree_util.DictKey("wq"),)
+    # divisible: both dims shard
+    spec = param_pspec(path, Leaf((8, 8)), mesh, axes, stacked=False)
+    assert spec == P(("data",), ("model",))
+    # odd dims: fall back to replication per-dim
+    spec = param_pspec(path, Leaf((7, 8)), mesh, axes, stacked=False)
+    assert spec == P(None, ("model",))
+    # stacked layer dim stays replicated
+    path2 = (jax.tree_util.DictKey("blocks"), jax.tree_util.DictKey("wq"))
+    spec = param_pspec(path2, Leaf((4, 8, 8)), mesh, axes, stacked=True)
+    assert spec == P(None, ("data",), ("model",))
+
+
+def test_input_specs_cover_every_cell():
+    from repro.configs.base import SHAPES, all_archs, get_arch, supports
+    from repro.launch.dryrun_lib import input_specs
+
+    n_cells = 0
+    n_skips = 0
+    for arch in all_archs():
+        cfg = get_arch(arch)
+        for shape in SHAPES.values():
+            ok, why = supports(cfg, shape)
+            n_cells += 1
+            if not ok:
+                n_skips += 1
+                continue
+            specs = input_specs(cfg, shape)
+            assert all(isinstance(v, jax.ShapeDtypeStruct) for v in specs.values())
+            if shape.kind != "decode":
+                assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+    assert n_cells == 40
+    assert n_skips == 6  # documented full-attention long_500k skips

@@ -1,0 +1,128 @@
+"""Single-node engine: spatial-join correctness (grid == brute force) and
+tick semantics, using the paper's Fig. 2 fish program."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.brasil import (
+    AgentClass,
+    Eff,
+    Other,
+    Self,
+    abs_,
+    invert_effects,
+)
+from repro.core import Engine, Simulation, uniform_population
+
+
+def fig2_fish(vis=1.0):
+    """The paper's Fig. 2 class (deterministic variant for exact replay)."""
+    F = AgentClass("Fish", position=("x", "y"), visibility=(vis, vis))
+    F.state("x", reach=0.1).state("y", reach=0.1).state("vx").state("vy")
+    F.effect("avoidx", "sum").effect("avoidy", "sum").effect("count", "sum")
+    eps = 1e-1
+    F.emit("other", "avoidx", 1.0 / (abs_(Self("x") - Other("x")) + eps))
+    F.emit("other", "avoidy", 1.0 / (abs_(Self("y") - Other("y")) + eps))
+    F.emit("other", "count", 1.0)
+    F.update("x", Self("x") + Self("vx"))
+    F.update("y", Self("y") + Self("vy"))
+    F.update("vx", Self("vx") * 0.95 + Eff("avoidx") / (Eff("count") + 1.0) * 0.01)
+    F.update("vy", Self("vy") * 0.95 + Eff("avoidy") / (Eff("count") + 1.0) * 0.01)
+    return F
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(5, 80))
+@settings(max_examples=10, deadline=None)
+def test_grid_join_matches_bruteforce(seed, n):
+    sim = Simulation.build(fig2_fish(), world_lo=(0, 0), world_hi=(12, 9))
+    state = uniform_population(sim, n, capacity=n + 8, seed=seed)
+    eg = Engine(sim, n_agents_hint=n, index="grid").query_effects(state)
+    eb = Engine(sim, n_agents_hint=n, index="brute").query_effects(state)
+    for k in eg:
+        np.testing.assert_allclose(
+            np.asarray(eg[k]), np.asarray(eb[k]), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_effect_inversion_query_equivalence():
+    F = fig2_fish()
+    sim = Simulation.build(F, world_lo=(0, 0), world_hi=(12, 9))
+    simi = Simulation.build(invert_effects(F), world_lo=(0, 0), world_hi=(12, 9))
+    state = uniform_population(sim, 60, capacity=64, seed=7)
+    e = Engine(sim, n_agents_hint=60).query_effects(state)
+    ei = Engine(simi, n_agents_hint=60).query_effects(state)
+    for k in e:
+        np.testing.assert_allclose(
+            np.asarray(e[k]), np.asarray(ei[k]), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_ticks_preserve_population_and_finiteness():
+    sim = Simulation.build(fig2_fish(), world_lo=(0, 0), world_hi=(12, 9))
+    state = uniform_population(sim, 50, capacity=64, seed=3)
+    out, counts = Engine(sim, n_agents_hint=50).run(state, n_ticks=25, seed=0)
+    assert np.asarray(counts).tolist() == [50] * 25
+    for k, v in out.fields.items():
+        assert np.isfinite(np.asarray(v)[np.asarray(out.alive)]).all(), k
+
+
+def test_reach_crop_enforced():
+    """#range: no state may move more than its reach bound per tick."""
+    F = AgentClass("A", position=("x", "y"), visibility=(1.0, 1.0))
+    F.state("x", reach=0.25).state("y", reach=0.25)
+    F.effect("e", "sum")
+    F.emit("self", "e", 1.0)
+    F.update("x", Self("x") + 5.0)  # tries to jump far
+    F.update("y", Self("y"))
+    sim = Simulation.build(F, world_lo=(0, 0), world_hi=(10, 10))
+    state = uniform_population(sim, 20, capacity=24, seed=0)
+    x0 = np.asarray(state.fields["x"]).copy()
+    out, _ = Engine(sim, n_agents_hint=20).run(state, n_ticks=1, seed=0)
+    x1 = np.asarray(out.fields["x"])
+    alive = np.asarray(out.alive)
+    np.testing.assert_allclose(x1[alive] - x0[alive], 0.25, atol=1e-5)
+
+
+def test_visibility_limits_interaction():
+    """Weak-reference semantics (Thm 1): agents outside ρ contribute nothing."""
+    F = AgentClass("A", position=("x", "y"), visibility=(1.0, 1.0))
+    F.state("x").state("y")
+    F.effect("cnt", "sum")
+    F.emit("self", "cnt", 1.0)
+    F.update("x", Self("x"))
+    F.update("y", Self("y"))
+    sim = Simulation.build(F, world_lo=(0, 0), world_hi=(10, 10))
+    state = sim.init_population(
+        4,
+        oid=np.arange(3),
+        x=np.asarray([1.0, 1.5, 9.0], np.float32),
+        y=np.asarray([1.0, 1.0, 1.0], np.float32),
+    )
+    eff = Engine(sim, n_agents_hint=3).query_effects(state)
+    assert np.asarray(eff["cnt"])[:3].tolist() == [1.0, 1.0, 0.0]
+
+
+def test_dead_agents_do_not_interact():
+    F = AgentClass("A", position=("x", "y"), visibility=(2.0, 2.0))
+    F.state("x").state("y").state("hp")
+    F.effect("cnt", "sum")
+    F.emit("self", "cnt", 1.0)
+    F.update("x", Self("x"))
+    F.update("y", Self("y"))
+    F.update("hp", Self("hp") - 1.0)
+    F.kill(Self("hp") <= 1.0)
+    sim = Simulation.build(F, world_lo=(0, 0), world_hi=(10, 10))
+    state = sim.init_population(
+        4, oid=np.arange(2),
+        x=np.asarray([1.0, 1.5], np.float32),
+        y=np.asarray([1.0, 1.0], np.float32),
+        hp=np.asarray([1.0, 5.0], np.float32),
+    )
+    eng = Engine(sim, n_agents_hint=2)
+    out, counts = eng.run(state, n_ticks=1, seed=0)
+    assert int(counts[-1]) == 1  # first agent died
+    eff = eng.query_effects(out)
+    assert float(np.asarray(eff["cnt"])[1]) == 0.0  # survivor sees nobody

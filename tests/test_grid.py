@@ -1,0 +1,88 @@
+"""Grid index properties: the candidate set must cover every pair within
+the visibility bound (completeness — the KD-tree-replacement's contract)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import grid as G
+
+
+def _candidate_pairs(gs, lo, x, y, alive):
+    table, overflow = G.build_table(gs, lo, jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive))
+    cand, valid = G.candidates(gs, lo, table, jnp.asarray(x), jnp.asarray(y))
+    assert int(overflow) == 0
+    pairs = set()
+    cand = np.asarray(cand)
+    valid = np.asarray(valid)
+    for i in range(len(x)):
+        for j, ok in zip(cand[i], valid[i]):
+            if ok:
+                pairs.add((i, int(j)))
+    return pairs
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 60),
+    vis=st.floats(0.3, 3.0),
+)
+@settings(max_examples=30, deadline=None)
+def test_stencil_covers_visibility(seed, n, vis):
+    rs = np.random.RandomState(seed)
+    ext = (10.0, 8.0)
+    x = rs.uniform(0, ext[0], n).astype(np.float32)
+    y = rs.uniform(0, ext[1], n).astype(np.float32)
+    alive = rs.rand(n) > 0.2
+    gs = G.make_grid(ext, (vis, vis), n, capacity_factor=50.0)
+    pairs = _candidate_pairs(gs, (0.0, 0.0), x, y, alive)
+    for i in range(n):
+        for j in range(n):
+            if i == j or not (alive[i] and alive[j]):
+                continue
+            if abs(x[i] - x[j]) <= vis and abs(y[i] - y[j]) <= vis:
+                assert (i, j) in pairs, (
+                    f"missing visible pair {i},{j}: "
+                    f"d=({abs(x[i]-x[j]):.3f},{abs(y[i]-y[j]):.3f}) vis={vis}"
+                )
+
+
+def test_periodic_stencil_wraps():
+    ext = (10.0, 4.0)
+    gs = G.make_grid(ext, (1.0, 1.0), 4, capacity_factor=50.0, periodic=(True, False))
+    x = np.asarray([0.2, 9.8], np.float32)
+    y = np.asarray([1.0, 1.0], np.float32)
+    alive = np.ones(2, bool)
+    pairs = _candidate_pairs(gs, (0.0, 0.0), x, y, alive)
+    assert (0, 1) in pairs and (1, 0) in pairs
+
+
+def test_out_of_extent_clamps_into_border_cells():
+    ext = (4.0, 4.0)
+    gs = G.make_grid(ext, (1.0, 1.0), 4, capacity_factor=50.0)
+    # one agent beyond the extent, one just inside: must still be candidates
+    x = np.asarray([4.6, 3.9], np.float32)
+    y = np.asarray([2.0, 2.0], np.float32)
+    pairs = _candidate_pairs(gs, (0.0, 0.0), x, y, np.ones(2, bool))
+    assert (0, 1) in pairs and (1, 0) in pairs
+
+
+def test_capacity_overflow_detected():
+    ext = (4.0, 4.0)
+    gs = G.GridSpec(nx=4, ny=4, sx=1.0, sy=1.0, capacity=2)
+    x = jnp.asarray([0.5, 0.5, 0.5, 0.5], jnp.float32)  # 4 agents, capacity 2
+    y = jnp.asarray([0.5, 0.5, 0.5, 0.5], jnp.float32)
+    _, overflow = G.build_table(gs, (0.0, 0.0), x, y, jnp.ones(4, bool))
+    assert int(overflow) == 2
+
+
+def test_dead_agents_excluded():
+    ext = (4.0, 4.0)
+    gs = G.make_grid(ext, (1.0, 1.0), 4, capacity_factor=50.0)
+    x = np.asarray([1.0, 1.1], np.float32)
+    y = np.asarray([1.0, 1.0], np.float32)
+    alive = np.asarray([True, False])
+    table, _ = G.build_table(gs, (0.0, 0.0), jnp.asarray(x), jnp.asarray(y), jnp.asarray(alive))
+    # dead agent never appears in the table
+    assert 1 not in set(np.asarray(table).ravel().tolist())

@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import (
+    flash_attention,
+    flash_attention_reference,
+)
+from repro.kernels.rwkv6.ops import wkv, wkv_reference
+from repro.kernels.spatial_interact.ops import (
+    spatial_interact,
+    spatial_interact_reference,
+)
+
+
+# ---------------------------------------------------------------------------
+# spatial_interact
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 100), n=st.sampled_from([64, 192, 320]))
+@settings(max_examples=8, deadline=None)
+def test_spatial_interact_full_sweep(seed, n):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.uniform(0, 15, n).astype(np.float32))
+    y = jnp.asarray(rs.uniform(0, 5, n).astype(np.float32))
+    hx = jnp.asarray(rs.randn(n).astype(np.float32))
+    hy = jnp.asarray(rs.randn(n).astype(np.float32))
+    alive = jnp.asarray(rs.rand(n) > 0.2)
+    got = spatial_interact(x, y, hx, hy, alive, alpha=0.3, rho=1.0,
+                           interpret=True, tq=64, tk=64)
+    ref = spatial_interact_reference(x, y, hx, hy, alive, alpha=0.3, rho=1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_spatial_interact_banded_matches_full():
+    rs = np.random.RandomState(7)
+    n = 512
+    x = jnp.asarray(rs.uniform(0, 40, n).astype(np.float32))
+    y = jnp.asarray(rs.uniform(0, 5, n).astype(np.float32))
+    hx = jnp.asarray(rs.randn(n).astype(np.float32))
+    hy = jnp.asarray(rs.randn(n).astype(np.float32))
+    alive = jnp.ones(n, bool)
+    ref = spatial_interact_reference(x, y, hx, hy, alive, alpha=0.2, rho=1.0)
+    # safe band: max #agents within a 2·rho x-interval
+    xs = np.sort(np.asarray(x))
+    band = int(max((xs < xv + 1.0).sum() - (xs < xv - 1.0).sum() for xv in xs)) + 8
+    got = spatial_interact(x, y, hx, hy, alive, alpha=0.2, rho=1.0,
+                           band=band, interpret=True, tq=64, tk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize(
+    "b,s,h,kv,d,window",
+    [
+        (2, 256, 4, 2, 64, None),
+        (2, 256, 4, 4, 64, 64),
+        (1, 128, 2, 1, 32, None),
+        (1, 512, 2, 2, 64, 128),
+    ],
+)
+def test_flash_attention_sweep(b, s, h, kv, d, window, dtype, atol):
+    rs = np.random.RandomState(0)
+    q = jnp.asarray(rs.randn(b, s, h, d)).astype(dtype)
+    k = jnp.asarray(rs.randn(b, s, kv, d)).astype(dtype)
+    v = jnp.asarray(rs.randn(b, s, kv, d)).astype(dtype)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_reference(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=atol
+    )
+
+
+def test_flash_attention_matches_model_reference():
+    """Kernel vs the model's jnp streaming implementation (same tiling idea)."""
+    from repro.models import attention as A
+
+    rs = np.random.RandomState(3)
+    b, s, h, kv, d = 2, 256, 4, 2, 32
+    q = jnp.asarray(rs.randn(b, s, h, d).astype(np.float32))
+    k = jnp.asarray(rs.randn(b, s, kv, d).astype(np.float32))
+    v = jnp.asarray(rs.randn(b, s, kv, d).astype(np.float32))
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    ref = A.flash_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("b,h,t,kd", [(2, 2, 128, 32), (1, 4, 64, 16)])
+def test_wkv_sweep(b, h, t, kd, chunk):
+    if t % chunk:
+        pytest.skip("chunk must divide t")
+    rs = np.random.RandomState(1)
+    r = jnp.asarray(rs.randn(b, h, t, kd).astype(np.float32)) * 0.5
+    k = jnp.asarray(rs.randn(b, h, t, kd).astype(np.float32)) * 0.5
+    v = jnp.asarray(rs.randn(b, h, t, kd).astype(np.float32)) * 0.5
+    logw = -jnp.exp(jnp.asarray(rs.randn(b, h, t, kd).astype(np.float32)) * 0.3)
+    u = jnp.asarray(rs.randn(h, kd).astype(np.float32)) * 0.1
+    got = wkv(r, k, v, logw, u, chunk=chunk, interpret=True)
+    ref = wkv_reference(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_matches_model_chunked_form():
+    """Kernel vs the model's chunked jnp implementation."""
+    from repro.models import rwkv6 as R
+
+    rs = np.random.RandomState(5)
+    b, t, h, kd = 2, 128, 2, 16
+    r = jnp.asarray(rs.randn(b, t, h, kd).astype(np.float32)) * 0.5
+    k = jnp.asarray(rs.randn(b, t, h, kd).astype(np.float32)) * 0.5
+    v = jnp.asarray(rs.randn(b, t, h, kd).astype(np.float32)) * 0.5
+    logw = -jnp.exp(jnp.asarray(rs.randn(b, t, h, kd).astype(np.float32)) * 0.3)
+    u = jnp.asarray(rs.randn(h, kd).astype(np.float32)) * 0.1
+    s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+    model_out, _ = R._wkv_chunked(r, k, v, logw, u, s0, chunk=32)
+    kern_out = wkv(
+        jnp.moveaxis(r, 2, 1), jnp.moveaxis(k, 2, 1),
+        jnp.moveaxis(v, 2, 1), jnp.moveaxis(logw, 2, 1), u,
+        chunk=32, interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.moveaxis(kern_out, 1, 2)), np.asarray(model_out),
+        rtol=1e-4, atol=1e-4,
+    )

@@ -1,0 +1,62 @@
+"""1-D load balancer: equal-cost inversion, migration estimate, decision."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import loadbalance as LB
+
+
+def test_equal_cost_bounds_balances_skewed_load():
+    bounds = np.asarray([0.0, 25.0, 50.0, 75.0, 100.0])
+    costs = np.asarray([100.0, 0.0, 0.0, 0.0])
+    new = LB.equal_cost_bounds(bounds, costs, min_width=1.0)
+    # all load is in slab 0 → new boundaries subdivide [0, 25)
+    assert new[0] == 0.0 and new[-1] == 100.0
+    assert np.all(np.diff(new) >= 1.0 - 1e-9)
+    assert new[1] < 25.0 and new[2] < 26.0 and new[3] < 27.0
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    p=st.integers(2, 12),
+)
+@settings(max_examples=40, deadline=None)
+def test_equal_cost_bounds_monotone_and_min_width(seed, p):
+    rs = np.random.RandomState(seed)
+    edges = np.concatenate([[0.0], np.sort(rs.uniform(1, 99, p - 1)), [100.0]])
+    costs = rs.uniform(0, 10, p)
+    min_w = 0.5
+    new = LB.equal_cost_bounds(edges, costs, min_width=min_w)
+    assert new[0] == edges[0] and new[-1] == edges[-1]
+    assert np.all(np.diff(new) >= min_w - 1e-9)
+
+
+def test_migration_estimate_zero_when_unchanged():
+    bounds = np.asarray([0.0, 50.0, 100.0])
+    counts = np.asarray([10.0, 10.0])
+    assert LB.estimate_migration(bounds, bounds, counts) == 0.0
+
+
+def test_decision_balanced_load_no_rebalance():
+    bounds = np.linspace(0, 100, 5)
+    counts = np.asarray([10.0, 10.5, 9.5, 10.0])
+    d = LB.decide(bounds, counts, min_width=1.0)
+    assert not d.rebalance
+    assert d.imbalance < 1.1
+
+
+def test_decision_skewed_load_rebalances():
+    bounds = np.linspace(0, 100, 5)
+    counts = np.asarray([100.0, 2.0, 2.0, 2.0])
+    d = LB.decide(bounds, counts, min_width=1.0)
+    assert d.rebalance
+    assert d.predicted_imbalance < d.imbalance
+
+
+def test_pair_weight_prefers_denser_slabs():
+    bounds = np.asarray([0.0, 50.0, 100.0])
+    counts = np.asarray([20.0, 20.0])
+    flat = LB.slab_costs(counts, np.diff(bounds), pair_weight=0.0)
+    quad = LB.slab_costs(counts, np.diff(bounds), pair_weight=1.0)
+    assert np.all(quad > flat)

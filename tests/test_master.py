@@ -1,0 +1,23 @@
+"""Master-level fault tolerance + load balancing (subprocess, fake devices)."""
+
+import pytest
+
+from test_distribute import run_helper
+
+
+def test_checkpoint_restart_reexecutes_identically():
+    """Paper recovery model: re-execute all ticks since the last checkpoint."""
+    res = run_helper("master_check.py", ["checkpoint_resume"], 4)
+    assert res["ok"], res
+
+
+def test_elastic_restore_on_fewer_devices():
+    """Mesh-agnostic checkpoints: resume on P/2 devices after 'node loss'."""
+    res = run_helper("master_check.py", ["elastic"], 8)
+    assert res["ok"], res
+
+
+def test_load_balancing_reduces_imbalance():
+    """Fig. 7/8: drifting fish school; LB keeps slab costs balanced."""
+    res = run_helper("master_check.py", ["loadbalance"], 4, timeout=900)
+    assert res["ok"], res

@@ -1,0 +1,160 @@
+"""The paper's three simulation models: invariants + inversion equivalence."""
+
+import numpy as np
+import pytest
+
+from repro.core import Engine
+from repro.sims.fish import init_school, make_fish_sim
+from repro.sims.predator import init_population, make_predator_sim, make_spawn_hook
+from repro.sims.traffic import init_traffic, make_traffic_sim
+from repro.sims.traffic_oracle import OracleParams, TrafficOracle, rmspe
+
+
+def test_fish_school_coheres_and_moves():
+    sim = make_fish_sim(world=(40.0, 10.0), omega=1.5, noise=0.02)
+    # single informed direction (+x): informed individuals must entrain the
+    # school (Couzin's information-transfer effect) → the school drifts +x
+    st = init_school(
+        sim, n=250, capacity=300, seed=0,
+        directions=((1.0, 0.0), (1.0, 0.0)), informed_fraction=0.2,
+    )
+    eng = Engine(sim, n_agents_hint=250, cell_capacity=128)
+    x0 = np.asarray(st.fields["x"])[np.asarray(st.alive)].mean()
+    out, counts = eng.run(st, n_ticks=100, seed=0)
+    assert int(counts[-1]) == 250
+    alive = np.asarray(out.alive)
+    hx = np.asarray(out.fields["hx"])[alive]
+    hy = np.asarray(out.fields["hy"])[alive]
+    norm = np.sqrt(hx**2 + hy**2)
+    np.testing.assert_allclose(norm, 1.0, atol=1e-4)  # unit headings
+    x1 = np.asarray(out.fields["x"])[alive].mean()
+    assert x1 > x0 + 0.5, (x0, x1)  # informed minority steered the school
+
+
+def test_fish_opposing_informed_groups_pull_apart():
+    """Two informed subgroups pulling ±x (paper Fig. 7 setup): each
+    informed subgroup must make headway in its preferred direction — the
+    drift that changes the spatial distribution and exercises the load
+    balancer."""
+    sim = make_fish_sim(world=(60.0, 12.0), omega=3.0, noise=0.01)
+    st = init_school(sim, n=200, capacity=256, seed=1, informed_fraction=0.4)
+    eng = Engine(sim, n_agents_hint=200, cell_capacity=128)
+    alive0 = np.asarray(st.alive)
+    px = np.asarray(st.fields["px"])
+    plus, minus = alive0 & (px > 0.5), alive0 & (px < -0.5)
+    x0 = np.asarray(st.fields["x"])
+    out, _ = eng.run(st, n_ticks=150, seed=0)
+    x1 = np.asarray(out.fields["x"])
+    gap0 = x0[plus].mean() - x0[minus].mean()
+    gap1 = x1[plus].mean() - x1[minus].mean()
+    assert gap1 > gap0 + 1.0, (gap0, gap1)
+
+
+def test_traffic_invariants_and_flow():
+    sim = make_traffic_sim(length=3000.0)
+    st = init_traffic(sim, n=300, capacity=400, seed=0)
+    eng = Engine(sim, n_agents_hint=300)
+    out, counts = eng.run(st, n_ticks=50, seed=0)
+    assert int(counts[-1]) == 300
+    alive = np.asarray(out.alive)
+    x = np.asarray(out.fields["x"])[alive]
+    v = np.asarray(out.fields["v"])[alive]
+    lane = np.asarray(out.fields["lane"])[alive]
+    assert (x >= 0).all() and (x < 3000.0).all()      # wrapped
+    assert (v >= 0).all() and (v <= 30.0 + 1e-5).all()  # physical speeds
+    assert set(np.unique(lane)).issubset({0.0, 1.0, 2.0, 3.0})
+    assert v.mean() > 5.0  # traffic flows
+
+
+def test_traffic_statistics_match_handcoded_oracle():
+    """Table 2 methodology: aggregate lane statistics RMSPE between the
+    BRASIL program and the independent hand-coded simulator."""
+    n, ticks, warmup = 240, 60, 20
+    sim = make_traffic_sim(length=2000.0)
+    st = init_traffic(sim, n=n, capacity=300, seed=0)
+    eng = Engine(sim, n_agents_hint=n)
+
+    # BRASIL side: average speed + lane occupancy over the run
+    vs, lanes = [], []
+    state = st
+    for t in range(ticks):
+        state, _ = eng.run(state, n_ticks=1, seed=0, t0=t)
+        if t >= warmup:
+            alive = np.asarray(state.alive)
+            vs.append(np.asarray(state.fields["v"])[alive].mean())
+            lanes.append(
+                [
+                    (np.abs(np.asarray(state.fields["lane"])[alive] - ln) < 0.5).sum()
+                    for ln in range(4)
+                ]
+            )
+    brasil_v = np.mean(vs)
+    brasil_occ = np.mean(lanes, axis=0)
+
+    # oracle side (same model, independent code + rng)
+    p = OracleParams(length=2000.0)
+    orc = TrafficOracle(p, seed=999)
+    rs = np.random.RandomState(0)
+    x = rs.uniform(0, p.length, n)
+    lane = rs.randint(0, 4, n).astype(float)
+    v = rs.uniform(10.0, 24.0, n)
+    ovs, olanes = [], []
+    for t in range(ticks):
+        x, lane, v, _ = orc.step(x, lane, v)
+        if t >= warmup:
+            ovs.append(v.mean())
+            olanes.append([(np.abs(lane - ln) < 0.5).sum() for ln in range(4)])
+    oracle_v = np.mean(ovs)
+    oracle_occ = np.mean(olanes, axis=0)
+
+    assert rmspe([oracle_v], [brasil_v]) < 0.15, (oracle_v, brasil_v)
+    assert rmspe(oracle_occ + 1, brasil_occ + 1) < 0.35, (oracle_occ, brasil_occ)
+
+
+def test_predator_inversion_exact_equivalence():
+    """Thm 2 end-to-end: scatter and compiler-inverted gather scripts give
+    identical trajectories (same rand streams)."""
+    st = None
+    outs = []
+    for inverted in (False, True):
+        sim = make_predator_sim(world=(15.0, 15.0), inverted=inverted)
+        if st is None:
+            st = init_population(sim, n_prey=200, n_pred=20, capacity=300, seed=0)
+        assert sim.plan.has_nonlocal is (not inverted)
+        eng = Engine(sim, n_agents_hint=220)
+        out, counts = eng.run(st, n_ticks=30, seed=0)
+        outs.append((out, np.asarray(counts)))
+    (a, ca), (b, cb) = outs
+    assert np.array_equal(ca, cb)
+    assert ca[-1] < ca[0]  # some prey died: the non-local effect does bite
+    for k in a.fields:
+        np.testing.assert_allclose(
+            np.asarray(a.fields[k])[np.asarray(a.alive)],
+            np.asarray(b.fields[k])[np.asarray(b.alive)],
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+def test_predator_spawn_hook_fills_free_slots():
+    sim = make_predator_sim(world=(15.0, 15.0))
+    st = init_population(sim, n_prey=50, n_pred=5, capacity=100, seed=0)
+    # kill some prey so slots free up, boost health of others
+    alive = np.asarray(st.alive).copy()
+    health = np.asarray(st.fields["health"]).copy()
+    alive[10:20] = False
+    health[:10] = 99.0
+    import jax.numpy as jnp
+
+    from repro.core.agents import AgentState
+
+    st = AgentState(
+        alive=jnp.asarray(alive), oid=st.oid,
+        fields=dict(st.fields, health=jnp.asarray(health)),
+    )
+    hook = make_spawn_hook(spawn_threshold=95.0)
+    before = int(np.asarray(st.alive).sum())
+    out = hook(st, tick=0)
+    after = int(np.asarray(out.alive).sum())
+    assert after == before + 10  # 10 healthy parents spawned into 10 free slots
+    assert int(np.asarray(out.oid).max()) > int(np.asarray(st.oid).max())

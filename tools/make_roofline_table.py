@@ -1,0 +1,58 @@
+"""Generate the EXPERIMENTS.md §Roofline table from results/dryrun/*.json."""
+
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = [
+    "granite-8b", "qwen2-7b", "qwen1.5-110b", "h2o-danube-3-4b",
+    "deepseek-moe-16b", "mixtral-8x22b", "zamba2-1.2b", "whisper-base",
+    "chameleon-34b", "rwkv6-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_t(x):
+    return f"{x:.3g}"
+
+
+def main(result_dir="results/dryrun", mesh="single"):
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            path = os.path.join(result_dir, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(path):
+                rows.append(f"| {arch} | {shape} | — | — | — | — | (not run) | — | — |")
+                continue
+            with open(path) as f:
+                r = json.load(f)
+            if r.get("skipped"):
+                rows.append(
+                    f"| {arch} | {shape} | — | — | — | — | SKIP: full attention | — | — |")
+                continue
+            if not r.get("ok"):
+                rows.append(f"| {arch} | {shape} | — | — | — | — | FAIL | — | — |")
+                continue
+            roof = r["roofline"]
+            mem = r["memory"]
+            peak = mem["peak_estimate_bytes"] / 2**30
+            fits = "✓" if mem["peak_estimate_bytes"] <= mem["hbm_per_device"] else f"✗ {peak:.0f}GiB"
+            tc, tm, tl = roof["t_compute_s"], roof["t_memory_s"], roof["t_collective_s"]
+            dom = roof["dominant"]
+            frac = tc / max(tc, tm, tl) if max(tc, tm, tl) else 0
+            rows.append(
+                f"| {arch} | {shape} | {fmt_t(tc)} | {fmt_t(tm)} | {fmt_t(tl)} "
+                f"| {dom} | {fits} | {frac:.2f} | {r['useful_ratio']:.2f} |"
+            )
+    header = (
+        "| arch | shape | T_compute (s) | T_memory (s) | T_collective (s) "
+        "| dominant | fits 16 GiB | roofline frac | useful (6ND/HLO) |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    print(header)
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
